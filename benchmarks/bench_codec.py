@@ -1,0 +1,76 @@
+"""E2 — coding throughput (paper §3/§5): order-value computation and
+curve generation rates.
+
+The paper's point: the Mealy automaton costs O(log n) per conversion —
+too slow inside a loop — while the non-recursive Fig. 5 generator (and
+its data-parallel reformulation here) is O(1)/step.  We measure all of
+them plus the device-side jnp codec.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    gray_encode,
+    hilbert_decode,
+    hilbert_encode,
+    hilbert_encode_jax,
+    hilbert_path_recursive,
+    hilbert_path_vectorised,
+    peano_encode,
+    zorder_encode,
+)
+
+
+def _rate(fn, n_items: int, repeat: int = 5) -> float:
+    fn()  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    dt = (time.perf_counter() - t0) / repeat
+    return n_items / dt
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(0)
+    N = 1 << 18
+    i = rng.integers(0, 1 << 14, size=N)
+    j = rng.integers(0, 1 << 14, size=N)
+    h = np.asarray(hilbert_encode(i, j))
+    ij32 = jnp.asarray(i, jnp.int32), jnp.asarray(j, jnp.int32)
+
+    rows = []
+
+    def add(name, rate, derived=""):
+        rows.append({
+            "bench": "codec", "name": name,
+            "value": round(rate / 1e6, 2), "derived": derived or "Mops/s",
+        })
+
+    add("hilbert_encode_np", _rate(lambda: hilbert_encode(i, j, nbits=14), N),
+        "Mealy automaton, vectorised")
+    add("hilbert_decode_np", _rate(lambda: hilbert_decode(h, nbits=14), N))
+    add("zorder_encode_np", _rate(lambda: zorder_encode(i, j), N),
+        "bit interleave (PDEP-in-software)")
+    add("gray_encode_np", _rate(lambda: gray_encode(i, j), N))
+    add("peano_encode_np", _rate(lambda: peano_encode(i, j, ndigits=9), N),
+        "3-adic automaton")
+
+    enc = jax.jit(lambda a, b: hilbert_encode_jax(a, b, nbits=14))
+    enc(*ij32).block_until_ready()
+    add("hilbert_encode_jax",
+        _rate(lambda: enc(*ij32).block_until_ready(), N),
+        "device-side fori_loop codec")
+
+    # curve generation (pairs/s)
+    order = 9  # 512x512 = 262144 pairs
+    n2 = 1 << (2 * order)
+    add("gen_recursive_cfg", _rate(lambda: hilbert_path_recursive(order), n2),
+        "paper §4 CFG")
+    add("gen_vectorised_fig5", _rate(lambda: hilbert_path_vectorised(order), n2),
+        "beyond-paper data-parallel Fig.5")
+    return rows

@@ -1,0 +1,42 @@
+"""E5b — beyond-paper: Hilbert device layout for the ICI torus.
+
+Logical (data, model) neighbours should be physically adjacent on the 2-D
+torus.  We compare torus hop counts between raster (default) and
+FUR-Hilbert device orderings for the collective patterns the framework
+uses: ring all-reduce over each mesh axis row/column.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.launch.mesh import hilbert_grid_permutation
+
+
+def _phys_coords(n: int, m: int, perm: np.ndarray) -> np.ndarray:
+    """perm[logical_linear] = physical_linear; physical grid row-major."""
+    phys = perm.reshape(n, m)
+    return np.stack([phys // m, phys % m], axis=-1)  # (n, m, 2)
+
+
+def _torus_hops(a: np.ndarray, b: np.ndarray, n: int, m: int) -> int:
+    d0 = np.abs(a[..., 0] - b[..., 0])
+    d1 = np.abs(a[..., 1] - b[..., 1])
+    return int(np.sum(np.minimum(d0, n - d0) + np.minimum(d1, m - d1)))
+
+
+def run(n: int = 16, m: int = 16) -> list[dict]:
+    rows = []
+    raster = np.arange(n * m, dtype=np.int64)
+    hilb = hilbert_grid_permutation(n, m)
+    for name, perm in (("raster", raster), ("hilbert", hilb)):
+        c = _phys_coords(n, m, perm)
+        # ring neighbours along the logical "model" axis (rows) and
+        # "data" axis (columns), wrap-around included
+        hops_model = _torus_hops(c, np.roll(c, -1, axis=1), n, m)
+        hops_data = _torus_hops(c, np.roll(c, -1, axis=0), n, m)
+        rows.append({
+            "bench": "mesh_layout", "name": f"{name}_ring_hops",
+            "value": hops_model + hops_data,
+            "derived": f"model-axis={hops_model} data-axis={hops_data}",
+        })
+    return rows

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  E1 bench_locality   — Fig. 1(e) cache-miss curves + reload economy
+  E2 bench_codec      — §3/§5 coding & generation throughput
+  E3 bench_matmul     — §1 matmul traffic model + kernel check
+  E4 bench_apps       — §7 k-means / simjoin / FW / Cholesky
+  E5 bench_attention  — §6.2 jump-over on causal attention
+  E5b bench_mesh      — beyond-paper Hilbert ICI layout
+
+Prints ``bench,name,value,derived`` CSV.  Roofline terms come from
+``python -m repro.launch.dryrun`` (they need the 512-device env), not
+from here.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (
+        bench_apps,
+        bench_attention,
+        bench_codec,
+        bench_locality,
+        bench_matmul,
+        bench_mesh,
+    )
+
+    modules = [
+        ("locality", bench_locality),
+        ("codec", bench_codec),
+        ("matmul", bench_matmul),
+        ("apps", bench_apps),
+        ("attention", bench_attention),
+        ("mesh", bench_mesh),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("bench,name,value,derived")
+    t0 = time.time()
+    for name, mod in modules:
+        if only and only != name:
+            continue
+        for row in mod.run():
+            derived = str(row.get("derived", "")).replace(",", ";")
+            print(f"{row['bench']},{row['name']},{row['value']},{derived}")
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

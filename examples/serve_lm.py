@@ -1,0 +1,47 @@
+"""Serve a small model with batched, continuously-batched requests.
+
+Requests of different lengths join and leave decode slots mid-flight;
+per-slot position counters and slot-masked cache updates keep them
+isolated (asserted at the end against solo runs).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch tinyllama-1.1b]
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.serve import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    print(f"serving reduced {args.arch}: {cfg.num_layers}L d={cfg.d_model} "
+          f"{args.slots} slots")
+
+    engine = ServeEngine(cfg, params, num_slots=args.slots, max_len=128)
+    prompts = [
+        [11, 29, 3], [101, 7], [42, 42, 42, 42], [5], [77, 1, 9], [250, 16],
+    ]
+    reqs = [engine.submit(p, max_new=8) for p in prompts]
+    engine.run_until_done()
+    for r in reqs:
+        print(f"req{r.rid}: prompt={r.prompt} -> {r.out}")
+
+    # isolation check vs solo decoding
+    solo = ServeEngine(cfg, params, num_slots=1, max_len=128)
+    r0 = solo.submit(prompts[0], max_new=8)
+    solo.run_until_done()
+    assert r0.out == reqs[0].out, "continuous batching changed outputs!"
+    print("continuous-batching isolation: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Builds a scaled tinyllama-family config (~100M params), trains on the
+deterministic synthetic pipeline with checkpointing, prints the loss
+curve, and proves fault tolerance by killing the run halfway and resuming
+from the latest checkpoint.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch tinyllama-1.1b]
+"""
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs import get_config
+from repro.models import param_count_analytic
+from repro.train import SimulatedFailure, Trainer, TrainerConfig
+
+
+PRESETS = {
+    # ~100M-param driver (the deliverable config; a few hundred steps on
+    # real hardware).  On this CPU container use --preset cpu.
+    "100m": dict(num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
+                 head_dim=64, d_ff=1536, steps=300, micro_batch=8, seq=256),
+    "cpu": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+                head_dim=64, d_ff=768, steps=60, micro_batch=4, seq=128),
+}
+
+
+def build_cfg(arch: str, p: dict):
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(
+        cfg,
+        num_layers=p["num_layers"],
+        d_model=p["d_model"],
+        num_heads=p["num_heads"],
+        num_kv_heads=p["num_kv_heads"],
+        head_dim=p["head_dim"],
+        d_ff=p["d_ff"],
+        vocab_size=32000 if cfg.embed_inputs else cfg.vocab_size,
+        remat=False,
+    )
+    cfg.validate()
+    return cfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="cpu")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--inject-failure", action="store_true", default=True)
+    args = ap.parse_args()
+
+    preset = PRESETS[args.preset]
+    args.steps = args.steps or preset["steps"]
+    cfg = build_cfg(args.arch, preset)
+    print(f"arch family: {args.arch}  params: {param_count_analytic(cfg)/1e6:.1f}M")
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tcfg = TrainerConfig(
+            lr=3e-3, warmup_steps=20, total_steps=args.steps,
+            micro_batch=preset["micro_batch"], seq_len=preset["seq"],
+            ckpt_dir=ckpt_dir, ckpt_every=50,
+        )
+        trainer = Trainer(cfg, tcfg)
+
+        fail_at = {args.steps // 2} if args.inject_failure else set()
+
+        def failure_hook(step: int) -> None:
+            if step in fail_at:
+                fail_at.discard(step)
+                print(f"!! simulated node failure at step {step} — recovering")
+                raise SimulatedFailure
+
+        state, hist = trainer.run(args.steps, failure_hook=failure_hook)
+        for h in hist[:: max(len(hist) // 15, 1)]:
+            print(f"step {h['step']:4d}  loss {h['loss']:.4f}  lr {h['lr']:.2e}")
+        print(f"final loss: {hist[-1]['loss']:.4f} "
+              f"(restarts survived: {trainer.restarts})")
+        assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+if __name__ == "__main__":
+    main()

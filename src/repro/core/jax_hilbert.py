@@ -1,0 +1,100 @@
+"""Device-side Hilbert coding: the Mealy automaton as vectorised jnp ops.
+
+The paper's automaton (§3) processes bit-pairs sequentially; on TPU we run
+the same tables inside a ``lax.fori_loop`` over the (static) bit levels
+with the whole coordinate *vector* processed in parallel per level — the
+SIMD re-formulation the paper applies to its host loops (§7), mapped to
+the VPU.  Used on-device for Hilbert-ordered data sharding, token/expert
+ordering, and edge sorting; host-side schedule generation uses the numpy
+twin in :mod:`repro.core.hilbert` (bit-identical, asserted in tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hilbert import _DEC_IJ, _DEC_NEXT, _ENC_DIGIT, _ENC_NEXT, U
+
+_JENC_DIGIT = jnp.asarray(_ENC_DIGIT, dtype=jnp.int32)
+_JENC_NEXT = jnp.asarray(_ENC_NEXT, dtype=jnp.int32)
+_JDEC_IJ = jnp.asarray(_DEC_IJ, dtype=jnp.int32)
+_JDEC_NEXT = jnp.asarray(_DEC_NEXT, dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("nbits",))
+def hilbert_encode_jax(i: jax.Array, j: jax.Array, nbits: int) -> jax.Array:
+    """h = H(i, j) for int32 arrays; ``nbits`` bit-pair levels (static).
+
+    ``nbits`` is rounded up to even inside (paper §3 parity rule), and must
+    satisfy 2*nbits <= 31 for int32 order values (use int64 inputs with
+    jax_enable_x64 for more).
+    """
+    nbits = nbits + (nbits & 1)
+    i = i.astype(jnp.int32)
+    j = j.astype(jnp.int32)
+    state = jnp.full(jnp.broadcast_shapes(i.shape, j.shape), U, dtype=jnp.int32)
+    h = jnp.zeros_like(state)
+
+    def body(t, carry):
+        state, h = carry
+        level = nbits - 1 - t
+        ib = (i >> level) & 1
+        jb = (j >> level) & 1
+        q = ib * 2 + jb
+        h = (h << 2) | _JENC_DIGIT[state, q]
+        state = _JENC_NEXT[state, q]
+        return state, h
+
+    _, h = jax.lax.fori_loop(0, nbits, body, (state, h))
+    return h
+
+
+@partial(jax.jit, static_argnames=("nbits",))
+def hilbert_decode_jax(h: jax.Array, nbits: int) -> tuple[jax.Array, jax.Array]:
+    """(i, j) = H^-1(h) for int32 arrays; ``nbits`` bit-pair levels."""
+    nbits = nbits + (nbits & 1)
+    h = h.astype(jnp.int32)
+    state = jnp.full(h.shape, U, dtype=jnp.int32)
+    i = jnp.zeros_like(state)
+    j = jnp.zeros_like(state)
+
+    def body(t, carry):
+        state, i, j = carry
+        level = nbits - 1 - t
+        digit = (h >> (2 * level)) & 3
+        q = _JDEC_IJ[state, digit]
+        state = _JDEC_NEXT[state, digit]
+        i = (i << 1) | (q >> 1)
+        j = (j << 1) | (q & 1)
+        return state, i, j
+
+    _, i, j = jax.lax.fori_loop(0, nbits, body, (state, i, j))
+    return i, j
+
+
+def hilbert_sort_key(coords: jax.Array, nbits: int) -> jax.Array:
+    """Hilbert keys for int coordinate pairs coords[..., 2] (edge sorting,
+    locality-preserving token batching — paper §6.2 application note)."""
+    return hilbert_encode_jax(coords[..., 0], coords[..., 1], nbits)
+
+
+def zorder_encode_jax(i: jax.Array, j: jax.Array) -> jax.Array:
+    """Z(i, j) via shift-mask spreading (16-bit coords, int32 out)."""
+
+    def spread(x):
+        x = x.astype(jnp.uint32) & jnp.uint32(0xFFFF)
+        x = (x | (x << 8)) & jnp.uint32(0x00FF00FF)
+        x = (x | (x << 4)) & jnp.uint32(0x0F0F0F0F)
+        x = (x | (x << 2)) & jnp.uint32(0x33333333)
+        x = (x | (x << 1)) & jnp.uint32(0x55555555)
+        return x
+
+    return ((spread(i) << 1) | spread(j)).astype(jnp.int32)
+
+
+def schedule_to_device(sched: np.ndarray) -> jax.Array:
+    """Upload an int32 schedule table (scalar-prefetch operand)."""
+    return jnp.asarray(np.ascontiguousarray(sched), dtype=jnp.int32)

@@ -1,0 +1,207 @@
+"""Tile-schedule factory and HBM-traffic models.
+
+This is the bridge between the paper's curves and the TPU kernels: a
+*schedule* is an int32[steps, 2] table of (i, j) tile coordinates that a
+Pallas kernel's ``index_map`` reads (via scalar prefetch) to decide which
+operand tiles to map into VMEM at each grid step.  Pallas only re-copies
+an operand block when its index changes between consecutive grid steps —
+the TPU analogue of a cache hit — so the *order* of the schedule directly
+controls HBM→VMEM traffic.  The Hilbert property (exactly one coordinate
+changes per step) halves guaranteed re-fetches vs. worst-case orders and,
+unlike row-major, keeps working sets square at *every* scale
+(cache-oblivious, paper §1).
+
+Also here: the traffic/cache models used by benchmarks to reproduce the
+paper's Fig. 1(e) (cache misses vs. cache size) for tile streams.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Iterable
+
+import numpy as np
+
+from . import fgf
+from .fur import fur_path
+from .hilbert import hilbert_decode
+from .lindenmayer import hilbert_path_vectorised
+from .peano import peano_decode
+from .zorder import gray_decode, zorder_decode
+
+CURVES = ("row", "col", "zigzag", "zorder", "gray", "hilbert", "fur", "peano")
+
+
+def _row(n: int, m: int) -> np.ndarray:
+    i, j = np.divmod(np.arange(n * m, dtype=np.int64), m)
+    return np.stack([i, j], axis=1)
+
+
+def _col(n: int, m: int) -> np.ndarray:
+    j, i = np.divmod(np.arange(n * m, dtype=np.int64), n)
+    return np.stack([i, j], axis=1)
+
+
+def _zigzag(n: int, m: int) -> np.ndarray:
+    """Boustrophedon raster: row-major with every odd row reversed."""
+    p = _row(n, m)
+    p = p.reshape(n, m, 2)
+    p[1::2] = p[1::2, ::-1]
+    return p.reshape(n * m, 2)
+
+
+def _clip(decode: Callable, n: int, m: int) -> np.ndarray:
+    """Paper §6 baseline: iterate the 2^L (or 3^L) cover, ignore outside."""
+    if decode is peano_decode:
+        side = 1
+        while side < max(n, m):
+            side *= 3
+    else:
+        side = 1 << fgf.cover_order(n, m)
+    i, j = decode(np.arange(side * side, dtype=np.int64))
+    keep = (i < n) & (j < m)
+    return np.stack([i[keep], j[keep]], axis=1)
+
+
+def tile_schedule(curve: str, n: int, m: int) -> np.ndarray:
+    """(i, j) visit order for an n×m tile grid.  int32[(n*m, 2)].
+
+    ``hilbert`` uses the FGF jump-over walker to clip the power-of-two
+    cover (no enumeration overhead); ``fur`` is the overlay-grid
+    generalised curve (native n×m, unit steps).
+    """
+    if n <= 0 or m <= 0:
+        return np.zeros((0, 2), dtype=np.int32)
+    if curve == "row":
+        out = _row(n, m)
+    elif curve == "col":
+        out = _col(n, m)
+    elif curve == "zigzag":
+        out = _zigzag(n, m)
+    elif curve == "zorder":
+        out = _clip(zorder_decode, n, m)
+    elif curve == "gray":
+        out = _clip(gray_decode, n, m)
+    elif curve == "hilbert":
+        if n == m and (n & (n - 1)) == 0:
+            out = hilbert_path_vectorised(fgf.cover_order(n))  # fast path
+        else:
+            out = fgf.fgf_rect(fgf.cover_order(n, m), n, m)[:, 1:]
+    elif curve == "fur":
+        out = fur_path(n, m)
+    elif curve == "peano":
+        out = _clip(peano_decode, n, m)
+    else:
+        raise ValueError(f"unknown curve {curve!r}; one of {CURVES}")
+    assert out.shape == (n * m, 2), (curve, n, m, out.shape)
+    return np.ascontiguousarray(out.astype(np.int32))
+
+
+def triangle_schedule(curve: str, n: int, *, strict: bool = True) -> np.ndarray:
+    """Visit order for the lower triangle i > j (or i >= j) of n×n.
+
+    ``hilbert`` uses FGF jump-over (true Hilbert values, O(log) re-entry);
+    other curves filter their full schedule (the paper's naive strategy).
+    """
+    if curve == "hilbert":
+        out = fgf.fgf_triangle(fgf.cover_order(n), n=n, strict=strict)[:, 1:]
+    else:
+        full = tile_schedule(curve, n, n).astype(np.int64)
+        keep = full[:, 0] > full[:, 1] if strict else full[:, 0] >= full[:, 1]
+        out = full[keep]
+    return np.ascontiguousarray(out.astype(np.int32))
+
+
+def schedule_hilbert_values(sched: np.ndarray) -> np.ndarray:
+    """Canonical Hilbert value per schedule row (work-stealing keys)."""
+    from .hilbert import hilbert_encode
+
+    s = np.asarray(sched, dtype=np.int64)
+    return hilbert_encode(s[:, 0], s[:, 1])
+
+
+# ---------------------------------------------------------------------------
+# Traffic / cache models
+# ---------------------------------------------------------------------------
+
+def operand_reloads(sched: np.ndarray, axis: int) -> int:
+    """# of grid steps at which the ``axis`` tile index changes (+1 first).
+
+    This is exactly the number of HBM→VMEM copies Pallas issues for an
+    operand whose ``index_map`` depends only on ``sched[step, axis]``.
+    """
+    s = np.asarray(sched)
+    if len(s) == 0:
+        return 0
+    return int(1 + np.count_nonzero(np.diff(s[:, axis])))
+
+
+def matmul_traffic_bytes(
+    sched: np.ndarray,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    k_tiles: int,
+    bytes_in: int = 2,
+    bytes_out: int = 2,
+) -> dict[str, float]:
+    """Modeled HBM traffic of the swizzled matmul kernel.
+
+    Grid = schedule steps × k_tiles (k innermost).  A-panel (bm×bk) reloads
+    when (i, k) changes — i.e. k_tiles loads per i-change step, but
+    consecutive steps with equal i reuse all K panels only if the k loop
+    restarts identically; Pallas's rule is per-grid-step index equality,
+    and with k innermost the A tile index (i, k) changes every inner step
+    except when both i stays and k stays — k always cycles, so A reloads
+    k_tiles times per schedule step *unless* i is unchanged AND k_tiles==1.
+    We therefore model the *revisit* economy at the schedule level: an
+    operand panel (all its k tiles) is re-read from HBM iff its tile index
+    changed vs. the previous schedule step.  This matches the double
+    buffering of panels in the kernel implementation (ops.py streams full
+    K-panels per schedule step).
+    """
+    a_loads = operand_reloads(sched, 0)
+    b_loads = operand_reloads(sched, 1)
+    steps = len(sched)
+    a_bytes = a_loads * bm * bk * k_tiles * bytes_in
+    b_bytes = b_loads * bn * bk * k_tiles * bytes_in
+    o_bytes = steps * bm * bn * bytes_out
+    return {
+        "a_loads": a_loads,
+        "b_loads": b_loads,
+        "a_bytes": float(a_bytes),
+        "b_bytes": float(b_bytes),
+        "out_bytes": float(o_bytes),
+        "total_bytes": float(a_bytes + b_bytes + o_bytes),
+    }
+
+
+def lru_misses(stream: Iterable, cache_size: int) -> int:
+    """Classic LRU miss count over an object-id stream (paper Fig. 1e)."""
+    cache: OrderedDict = OrderedDict()
+    misses = 0
+    for key in stream:
+        if key in cache:
+            cache.move_to_end(key)
+        else:
+            misses += 1
+            cache[key] = None
+            if len(cache) > cache_size:
+                cache.popitem(last=False)
+    return misses
+
+
+def pair_stream(sched: np.ndarray) -> Iterable:
+    """The object-access stream of a pairwise loop: at step (i, j) the
+    algorithm touches object ('i', i) and object ('j', j) — the paper's
+    Fig. 1 model where both loop variables index object rows."""
+    for i, j in np.asarray(sched):
+        yield ("i", int(i))
+        yield ("j", int(j))
+
+
+def miss_curve(
+    sched: np.ndarray, cache_sizes: Iterable[int]
+) -> dict[int, int]:
+    """Cache-miss counts for a schedule across cache sizes (Fig. 1e)."""
+    return {int(s): lru_misses(pair_stream(sched), int(s)) for s in cache_sizes}

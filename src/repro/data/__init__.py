@@ -1,0 +1,3 @@
+from .pipeline import SyntheticPipeline, make_batch
+
+__all__ = ["SyntheticPipeline", "make_batch"]

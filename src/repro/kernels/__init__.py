@@ -1,0 +1,30 @@
+"""repro.kernels — Pallas TPU kernels for the paper's applications.
+
+Each kernel follows the project convention: <name>.py holds the
+pl.pallas_call + BlockSpec tiling, ops.py the public jit'd wrappers
+(padding, schedule choice, interpret dispatch), ref.py the pure-jnp
+oracles.  All kernels take their (i, j) tile order from a scalar-prefetch
+schedule table built by :mod:`repro.core.schedule` — that table IS the
+paper's contribution (Hilbert/FUR/FGF iteration order) in TPU form.
+"""
+from . import ops, ref
+from .attention import causal_schedule, flash_attention_swizzled, full_schedule
+from .cholesky import cholesky_blocked
+from .floyd_warshall import floyd_warshall_blocked
+from .kmeans import kmeans_assign_swizzled
+from .matmul import matmul_swizzled, tile_update_swizzled
+from .simjoin import simjoin_counts_swizzled
+
+__all__ = [
+    "ops",
+    "ref",
+    "causal_schedule",
+    "full_schedule",
+    "flash_attention_swizzled",
+    "cholesky_blocked",
+    "floyd_warshall_blocked",
+    "kmeans_assign_swizzled",
+    "matmul_swizzled",
+    "tile_update_swizzled",
+    "simjoin_counts_swizzled",
+]

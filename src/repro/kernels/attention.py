@@ -1,0 +1,165 @@
+"""Flash attention with FGF jump-over tile scheduling (paper §6.2).
+
+Causal attention touches only the lower-triangular half of the
+(q_tile × kv_tile) grid.  The usual TPU kernel runs the full rectangular
+grid and masks — paying compute and HBM traffic for tiles that contribute
+nothing.  The paper's jump-over idea applies directly: enumerate *only*
+the valid tiles with the FGF walker (triangle region, O(log) re-entry),
+handing the kernel a scalar-prefetch schedule.  ~2× fewer grid steps at
+long context.
+
+Schedule layout int32[steps, 4]: (q_tile, kv_tile, is_first, is_last)
+where first/last flag the schedule-order boundaries of each q tile's kv
+visit run (the online-softmax state is init'd / finalised there).  Within
+a q tile the kv tiles may be visited in any order (online softmax is
+order-free); we default to *serpentine* kv order so the kv operand tile is
+reused across every q-tile boundary — the boustrophedon trick, which on
+this state-constrained grid is the locality maximum the Hilbert family
+can reach (one register chain per q row forbids full 2-D swizzling; see
+DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_MASK_VALUE = -0.7 * float(np.finfo(np.float32).max)
+
+
+def causal_schedule(qt: int, kt_per_q, *, serpentine: bool = True) -> np.ndarray:
+    """FGF jump-over schedule for causal attention tiles.
+
+    ``kt_per_q``: either an int function-like (q -> #kv tiles) or None for
+    the standard causal triangle (kv_tile <= q_tile).  Returns
+    int32[steps, 4] (q, kv, first, last).
+    """
+    rows = []
+    for q in range(qt):
+        hi = q + 1 if kt_per_q is None else int(kt_per_q(q))
+        kvs = list(range(hi))
+        if serpentine and (q % 2 == 1):
+            kvs.reverse()
+        for pos, kv in enumerate(kvs):
+            rows.append((q, kv, 1 if pos == 0 else 0, 1 if pos == len(kvs) - 1 else 0))
+    return np.asarray(rows, dtype=np.int32)
+
+
+def full_schedule(qt: int, kt: int, *, serpentine: bool = True) -> np.ndarray:
+    """Non-causal (encoder) schedule: full rectangle, serpentine kv."""
+    return causal_schedule(qt, lambda q: kt, serpentine=serpentine)
+
+
+def _flash_kernel(
+    sched_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    sm_scale: float,
+    causal: bool,
+    bq: int,
+    bkv: int,
+):
+    s = pl.program_id(1)
+    first = sched_ref[s, 2]
+    last = sched_ref[s, 3]
+    q_tile = sched_ref[s, 0]
+    kv_tile = sched_ref[s, 1]
+
+    @pl.when(first == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (bkv, d)
+    v = v_ref[0].astype(jnp.float32)  # (bkv, d)
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+
+    if causal:
+        # mask only matters on the diagonal tile; cheap to apply always
+        q_pos = q_tile * bq + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+        kv_pos = kv_tile * bkv + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(q_pos >= kv_pos, scores, DEFAULT_MASK_VALUE)
+
+    m_prev = m_ref[:, 0:1]  # (bq, 1)
+    m_cur = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(scores - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[:, 0:1] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(last == 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / l_ref[:, 0:1]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sm_scale", "bq", "bkv", "interpret"),
+)
+def flash_attention_swizzled(
+    schedule: jax.Array,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Attention over (BH, S, D) tensors with a jump-over tile schedule.
+
+    q/k/v: (BH, S, D) — batch*heads flattened (GQA expansion in ops.py).
+    """
+    BH, S, D = q.shape
+    assert k.shape == v.shape == (BH, S, D)
+    assert S % bq == 0 and S % bkv == 0
+    if sm_scale is None:
+        sm_scale = 1.0 / float(np.sqrt(D))
+    steps = schedule.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, s, sr: (bh, sr[s, 0], 0)),
+            pl.BlockSpec((1, bkv, D), lambda bh, s, sr: (bh, sr[s, 1], 0)),
+            pl.BlockSpec((1, bkv, D), lambda bh, s, sr: (bh, sr[s, 1], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, s, sr: (bh, sr[s, 0], 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, sm_scale=sm_scale, causal=causal, bq=bq, bkv=bkv
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(schedule, q, k, v)

@@ -1,0 +1,92 @@
+"""k-Means assignment kernel with curve-scheduled tiles (paper §7).
+
+The assignment step streams the (point_tile × centroid_tile) distance
+grid.  Iterated row-major, the centroid panel cycles and is re-fetched for
+every point tile (the paper's Fig. 1(a) pathology); in Hilbert/FUR order
+exactly one of the two panels changes per step, halving HBM→VMEM panel
+traffic at any VMEM size.
+
+The kernel emits *per-(point_tile, centroid_tile) partial results* —
+tile-local (min, argmin) of the reduced metric m(x,c) = ||c||² − 2⟨x,c⟩ —
+and ops.py merges them with a tiny O(N · ct) jnp reduction.  This keeps
+every output block written exactly once, so the kernel is revisit-safe
+under ANY schedule order with no HBM read-modify-write hazard (an aliased
+accumulator would race with the block prefetch of the next grid step on
+real hardware; see DESIGN.md §Changed-assumptions).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _assign_kernel(sched_ref, x_ref, c_ref, cn_ref, min_out, arg_out, *, bc: int):
+    s = pl.program_id(0)
+    ct = sched_ref[s, 1]
+    x = x_ref[...].astype(jnp.float32)  # (bp, d)
+    c = c_ref[...].astype(jnp.float32)  # (bc, d)
+    # metric tile: ||c||^2 - 2 x.c   (bp, bc); monotone in distance per x
+    m = cn_ref[...] - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    min_out[0, 0] = jnp.min(m, axis=1)
+    arg_out[0, 0] = jnp.argmin(m, axis=1).astype(jnp.int32) + ct * bc
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "bc", "interpret"))
+def kmeans_assign_swizzled(
+    schedule: jax.Array,
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    bp: int = 256,
+    bc: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """(metric_min, assignment) per point.  x: (N, D), c: (K, D).
+
+    N % bp == 0, K % bc == 0 (ops.py pads).  Returns
+    (min_metric f32[N] — add ||x||² for true squared distances,
+     assign int32[N]).
+    """
+    N, D = x.shape
+    K, D2 = c.shape
+    assert D == D2 and N % bp == 0 and K % bc == 0
+    pt, ctn = N // bp, K // bc
+    assert schedule.shape == (pt * ctn, 2)
+
+    cnorm = jnp.sum(c.astype(jnp.float32) ** 2, axis=1)[None, :]  # (1, K)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(pt * ctn,),
+        in_specs=[
+            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 0], 0)),
+            pl.BlockSpec((bc, D), lambda s, sr: (sr[s, 1], 0)),
+            pl.BlockSpec((1, bc), lambda s, sr: (0, sr[s, 1])),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bp), lambda s, sr: (sr[s, 0], sr[s, 1], 0)),
+            pl.BlockSpec((1, 1, bp), lambda s, sr: (sr[s, 0], sr[s, 1], 0)),
+        ],
+    )
+    tile_min, tile_arg = pl.pallas_call(
+        functools.partial(_assign_kernel, bc=bc),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((pt, ctn, bp), jnp.float32),
+            jax.ShapeDtypeStruct((pt, ctn, bp), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(schedule, x, c, cnorm)
+
+    # O(N * ct) merge of the per-centroid-tile partials
+    best_ct = jnp.argmin(tile_min, axis=1)  # (pt, bp)
+    min_m = jnp.min(tile_min, axis=1).reshape(N)
+    arg = jnp.take_along_axis(tile_arg, best_ct[:, None, :], axis=1)[:, 0].reshape(N)
+    return min_m, arg

@@ -1,0 +1,153 @@
+"""Hilbert-swizzled blocked matmul — the paper's flagship application (§1, §7).
+
+TPU adaptation of the cache-oblivious matrix multiplication: the Pallas
+grid is linearised to ``(schedule_step, k_tile)`` and a *scalar-prefetch*
+schedule table (the nano-program analogue, paper §6.3) tells ``index_map``
+which (i, j) output tile each step works on.  Pallas re-copies an operand
+block HBM→VMEM only when its block index changes between consecutive grid
+steps, so the Hilbert/FUR property — exactly one of (i, j) changes per
+step — guarantees one of the two operand panels is reused at every step,
+at *any* VMEM size (cache-oblivious: the same schedule is optimal-order
+for v4/v5e/v5p VMEM budgets alike).
+
+The MXU wants 128-aligned tiles: block defaults are (bm, bn, bk) =
+(256, 256, 256) with an f32 VMEM accumulator; `k` is the inner grid dim so
+the accumulator lives across the K reduction and the output tile is
+written exactly once (no HBM read-modify-write of C).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(sched_ref, a_ref, b_ref, o_ref, acc_ref, *, k_tiles: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_tiles - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"),
+)
+def matmul_swizzled(
+    schedule: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = A @ B over the (i, j) tile order given by ``schedule``.
+
+    schedule: int32[(M/bm)*(N/bn), 2] — any bijective tile order (row,
+    zorder, hilbert, fur...).  A: (M, K), B: (K, N); M % bm == N % bn ==
+    K % bk == 0 (the public wrapper in ops.py pads).
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    mt, nt, kt = M // bm, N // bn, K // bk
+    assert schedule.shape == (mt * nt, 2), (schedule.shape, mt, nt)
+    out_dtype = out_dtype or a.dtype
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mt * nt, kt),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda s, k, sr: (sr[s, 0], k)),
+            pl.BlockSpec((bk, bn), lambda s, k, sr: (k, sr[s, 1])),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda s, k, sr: (sr[s, 0], sr[s, 1])),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_tiles=kt),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(schedule, a, b)
+
+
+def _accum_update_kernel(sched_ref, o_in_ref, a_ref, b_ref, o_ref, *, alpha: float):
+    """o += alpha * (a @ b^T) — single-shot tile update (SYRK/GEMM trailing
+    updates for Cholesky; o is input/output-aliased, each tile visited
+    exactly once so the read-modify-write is hazard-free)."""
+    o_ref[...] = (
+        o_in_ref[...]
+        + alpha
+        * jnp.dot(
+            a_ref[...], b_ref[...].T, preferred_element_type=jnp.float32
+        ).astype(o_ref.dtype)
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "alpha", "interpret")
+)
+def tile_update_swizzled(
+    schedule: jax.Array,
+    o: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+    alpha: float = -1.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """O[i,j] += alpha * A[i] @ B[j]^T for (i, j) in schedule order.
+
+    A: (M, Kp) row panels, B: (N, Kp) row panels, O: (M, N); the schedule
+    may cover any subset of tiles (e.g. the FGF lower triangle for the
+    Cholesky trailing update, paper §7).  O is donated (aliased).
+    """
+    M, Kp = a.shape
+    N, Kp2 = b.shape
+    assert Kp == Kp2 and o.shape == (M, N)
+    assert M % bm == 0 and N % bn == 0
+    steps = schedule.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda s, sr: (sr[s, 0], sr[s, 1])),
+            pl.BlockSpec((bm, Kp), lambda s, sr: (sr[s, 0], 0)),
+            pl.BlockSpec((bn, Kp), lambda s, sr: (sr[s, 1], 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda s, sr: (sr[s, 0], sr[s, 1])),
+    )
+    return pl.pallas_call(
+        functools.partial(_accum_update_kernel, alpha=alpha),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), o.dtype),
+        input_output_aliases={1: 0},  # o (arg after schedule) -> output 0
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(schedule, o, a, b)

@@ -1,0 +1,225 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These handle what the raw kernels don't: schedule construction (curve
+choice), padding to block multiples, GQA head expansion, dtype policy and
+the interpret/compiled dispatch (interpret=True on CPU — the kernels are
+TPU-targeted and validated in interpret mode per the project charter).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tile_schedule, triangle_schedule
+from . import ref
+from .attention import causal_schedule, flash_attention_swizzled, full_schedule
+from .cholesky import cholesky_blocked
+from .floyd_warshall import floyd_warshall_blocked
+from .kmeans import kmeans_assign_swizzled
+from .matmul import matmul_swizzled
+from .simjoin import simjoin_counts_swizzled
+
+DEFAULT_CURVE = "fur"  # overlay-grid Hilbert: native n×m, unit steps
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret(flag) -> bool:
+    if flag is None:
+        return not _on_tpu()
+    return bool(flag)
+
+
+def _pad2(x: jax.Array, r: int, c: int) -> jax.Array:
+    pr = (-x.shape[0]) % r
+    pc = (-x.shape[1]) % c
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    curve: str = DEFAULT_CURVE,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 256,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """C = A @ B with a curve-scheduled Pallas kernel (paper §1/§7)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    ap = _pad2(a, bm, bk)
+    bp = _pad2(b, bk, bn)
+    mt, nt = ap.shape[0] // bm, bp.shape[1] // bn
+    sched = jnp.asarray(tile_schedule(curve, mt, nt), dtype=jnp.int32)
+    out = matmul_swizzled(
+        sched, ap, bp, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+        interpret=_interpret(interpret),
+    )
+    return out[:M, :N]
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    bq: int = 128,
+    bkv: int = 128,
+    serpentine: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash attention over (B, H, S, D) with FGF jump-over scheduling.
+
+    GQA: if k/v have fewer heads, they are expanded (kernel-level GQA is a
+    production follow-up; the models use XLA attention for training).
+    """
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    if Hkv != H:
+        assert H % Hkv == 0
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    bq = min(bq, S)
+    bkv = min(bkv, S)
+    assert S % bq == 0 and S % bkv == 0, (S, bq, bkv)
+    qt, kt = S // bq, S // bkv
+    if causal:
+        assert bq == bkv, "causal schedule assumes square tiles"
+        sched = causal_schedule(qt, None, serpentine=serpentine)
+    else:
+        sched = full_schedule(qt, kt, serpentine=serpentine)
+    out = flash_attention_swizzled(
+        jnp.asarray(sched, dtype=jnp.int32),
+        q.reshape(B * H, S, D),
+        k.reshape(B * H, S, D),
+        v.reshape(B * H, S, D),
+        causal=causal,
+        sm_scale=sm_scale,
+        bq=bq,
+        bkv=bkv,
+        interpret=_interpret(interpret),
+    )
+    return out.reshape(B, H, S, D)
+
+
+def kmeans_assign(
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    curve: str = DEFAULT_CURVE,
+    bp: int = 256,
+    bc: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(squared distance to nearest centroid, assignment) per point."""
+    N, D = x.shape
+    K, _ = c.shape
+    bp, bc = min(bp, N), min(bc, K)
+    xp = _pad2(x, bp, 1)
+    # pad centroids with +inf-like rows that can never win
+    pc = (-K) % bc
+    cp = jnp.pad(c, ((0, pc), (0, 0)), constant_values=1e30) if pc else c
+    pt, ct = xp.shape[0] // bp, cp.shape[0] // bc
+    sched = jnp.asarray(tile_schedule(curve, pt, ct), dtype=jnp.int32)
+    min_m, assign = kmeans_assign_swizzled(
+        sched, xp, cp, bp=bp, bc=bc, interpret=_interpret(interpret)
+    )
+    d2 = min_m + jnp.sum(xp.astype(jnp.float32) ** 2, axis=1)
+    return d2[:N], assign[:N]
+
+
+def kmeans_lloyd(
+    x: jax.Array,
+    k: int,
+    *,
+    iters: int = 10,
+    curve: str = DEFAULT_CURVE,
+    seed: int = 0,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Full Lloyd iterations: swizzled assignment + segment-sum update."""
+    N, D = x.shape
+    key = jax.random.PRNGKey(seed)
+    c = x[jax.random.choice(key, N, shape=(k,), replace=False)]
+    assign = jnp.zeros((N,), dtype=jnp.int32)
+    for _ in range(iters):
+        _, assign = kmeans_assign(x, c, curve=curve, interpret=interpret)
+        sums = jax.ops.segment_sum(x.astype(jnp.float32), assign, num_segments=k)
+        cnt = jax.ops.segment_sum(jnp.ones((N,), jnp.float32), assign, num_segments=k)
+        c = jnp.where(cnt[:, None] > 0, sums / jnp.maximum(cnt, 1.0)[:, None], c)
+    return c, assign
+
+
+def simjoin_counts(
+    x: jax.Array,
+    eps: float,
+    *,
+    curve: str = "hilbert",
+    bp: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """ε-join neighbour counts with FGF-Hilbert triangle scheduling."""
+    N, D = x.shape
+    bp = min(bp, N)
+    # pad with far-away points that never join
+    pn = (-N) % bp
+    xp = jnp.pad(x, ((0, pn), (0, 0)), constant_values=1e15) if pn else x
+    pt = xp.shape[0] // bp
+    sched = jnp.asarray(triangle_schedule(curve, pt, strict=False), dtype=jnp.int32)
+    counts = simjoin_counts_swizzled(
+        sched, xp, eps=float(eps), bp=bp, interpret=_interpret(interpret)
+    )
+    return counts[:N]
+
+
+def floyd_warshall(
+    d: jax.Array,
+    *,
+    b: int = 128,
+    curve: str = "hilbert",
+    interpret: bool | None = None,
+) -> jax.Array:
+    n = d.shape[0]
+    b = min(b, n)
+    assert n % b == 0, "pad the adjacency matrix to a block multiple"
+    return floyd_warshall_blocked(d, b=b, curve=curve, interpret=_interpret(interpret))
+
+
+def cholesky(
+    a: jax.Array,
+    *,
+    b: int = 128,
+    curve: str = "hilbert",
+    interpret: bool | None = None,
+) -> jax.Array:
+    n = a.shape[0]
+    b = min(b, n)
+    assert n % b == 0, "pad the SPD matrix to a block multiple"
+    return cholesky_blocked(a, b=b, curve=curve, interpret=_interpret(interpret))
+
+
+__all__ = [
+    "matmul",
+    "attention",
+    "kmeans_assign",
+    "kmeans_lloyd",
+    "simjoin_counts",
+    "floyd_warshall",
+    "cholesky",
+    "ref",
+]

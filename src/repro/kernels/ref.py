@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every kernel (the correctness ground truth).
+
+Each function is the direct mathematical statement of what the
+corresponding Pallas kernel computes, with no tiling, no scheduling and no
+numerics tricks beyond f32 accumulation.  Tests sweep shapes/dtypes and
+assert_allclose kernels against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """q/k/v: (BH, S, D)."""
+    BH, S, D = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / float(np.sqrt(D))
+    scores = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        scores = jnp.where(mask[None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def squared_distances(x: jax.Array, y: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    return (
+        jnp.sum(x**2, axis=1)[:, None]
+        - 2.0 * x @ y.T
+        + jnp.sum(y**2, axis=1)[None, :]
+    )
+
+
+def kmeans_assign(x: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (min squared distance f32[N], assignment int32[N])."""
+    d2 = squared_distances(x, c)
+    return jnp.min(d2, axis=1), jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def simjoin_counts(x: jax.Array, eps: float) -> jax.Array:
+    """# of other points within eps of each point (self excluded)."""
+    d2 = squared_distances(x, x)
+    hit = d2 <= eps * eps
+    return jnp.sum(hit.astype(jnp.int32), axis=1) - 1
+
+
+def floyd_warshall(d: jax.Array) -> jax.Array:
+    """All-pairs shortest paths; d: (n, n) f32 with +inf for non-edges."""
+
+    def body(k, dist):
+        return jnp.minimum(dist, dist[:, k][:, None] + dist[k, :][None, :])
+
+    return jax.lax.fori_loop(0, d.shape[0], body, d.astype(jnp.float32))
+
+
+def cholesky(a: jax.Array) -> jax.Array:
+    """Lower Cholesky factor of an SPD matrix."""
+    return jnp.linalg.cholesky(a.astype(jnp.float32))

@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # CPU-backend artifact: WLICM hoists a bf16->f32 convert of the whole
+    # stacked remat-residual out of the backward while loop, materialising
+    # an f32 copy of every saved activation (TPU's cost model doesn't).
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion "
+    # the dry-run consumes HLO-level artifacts only (memory/cost/collective
+    # analysis); skip the LLVM optimization pipeline — 8× faster compiles
+    # with identical analysis results (verified on tinyllama train_4k).
+    "--xla_backend_optimization_level=0 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks the device count on first
+# init.  The dry-run (and only the dry-run) builds the 512-chip mesh on
+# CPU placeholder devices.
+
+"""Multi-pod dry-run: prove every (arch × shape × mesh) cell lowers,
+compiles, fits, and expose its roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+Per cell: jit(step).lower(**input_specs).compile() on the production mesh,
+then record memory_analysis() (fits?), cost_analysis() (FLOPs/bytes) and
+the collective-bytes histogram parsed from the compiled HLO — the inputs
+to EXPERIMENTS.md §Dry-run/§Roofline.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import input_specs, jit_for_cell
+from repro.roofline.analysis import (
+    analyze_cell,
+    cost_record,
+    extrapolate_depth,
+    roofline_report,
+)
+
+
+def _compile_cell(cfg, shape, mesh):
+    with mesh:
+        step = jit_for_cell(cfg, shape, mesh)
+        args = input_specs(cfg, shape)
+        lowered = step.lower(*args)
+        return lowered.compile()
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, skip_cost: bool = False,
+             policy: str = "2d", overrides: dict | None = None,
+             label: str = "") -> dict:
+    """Lower + compile one cell; returns the roofline record.
+
+    Pipeline: (1) full-depth scanned compile — the fits/compiles proof and
+    memory_analysis; (2) two shallow *unrolled* compiles for cost terms
+    (XLA counts while bodies once, see roofline.analysis docstring).
+
+    ``policy``/``overrides``/``label`` are the §Perf hillclimb knobs:
+    sharding policy (2d/fsdp/tp_only) and ModelConfig field overrides.
+    """
+    reason = skip_reason(arch, shape_name)
+    if reason is not None:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+    from repro.models.layers import set_sharding_policy
+
+    cfg = get_config(arch)
+    if policy == "arch-default":
+        # ZeRO-3 pays off when the global batch spreads over every chip
+        # (train_4k: 256 sequences / 256 chips).  Prefill (batch 32) and
+        # decode (per-token gathers) keep the 2d TP layout (§Perf:
+        # fsdp-prefill measured 6-25× WORSE — batch can't cover the mesh).
+        policy = cfg.sharding_policy if SHAPES[shape_name].mode == "train" \
+            else "2d"
+    set_sharding_policy(policy)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    t0 = time.time()
+    full = _compile_cell(cfg, shape, mesh)
+    t_full = time.time() - t0
+
+    if skip_cost:
+        mem = full.memory_analysis()
+        return {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "compile_s": round(t_full, 1),
+            "memory_per_device_bytes": int(
+                mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                + mem.output_size_in_bytes - mem.alias_size_in_bytes
+            ),
+        }
+
+    period = cfg.hybrid_attn_every or 1
+    d1, d2 = period, 2 * period
+    costs = []
+    for d in (d1, d2):
+        cfg_d = dataclasses.replace(cfg, num_layers=d, scan_unroll=True)
+        costs.append(cost_record(_compile_cell(cfg_d, shape, mesh)))
+    extrap = extrapolate_depth(costs[0], costs[1], d1, d2, cfg.num_layers)
+
+    record = analyze_cell(full, extrap, cfg, shape, mesh)
+    record.update(
+        arch=arch,
+        shape=shape_name,
+        multi_pod=multi_pod,
+        compile_s=round(t_full, 1),
+        policy=policy,
+        label=label,
+    )
+    if verbose:
+        print(f"== {arch} × {shape_name} ({'2x16x16' if multi_pod else '16x16'}) ==")
+        print(f"   memory_analysis: {full.memory_analysis()}")
+        print(roofline_report(record))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every runnable cell")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="compile-proof + memory only (no shallow cost twins)")
+    ap.add_argument("--policy",
+                    choices=["2d", "fsdp", "tp_only", "arch-default"],
+                    default="2d",
+                    help="sharding policy (perf hillclimb knob); "
+                         "'arch-default' uses each arch's optimized policy")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--label", default="", help="tag for §Perf iteration logs")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        f"dry-run needs 512 placeholder devices, got {len(jax.devices())}"
+    )
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        from repro.models import param_count_analytic
+
+        # cheap archs first: most of the table lands early
+        order = sorted(ARCHS, key=lambda a: param_count_analytic(get_config(a)))
+        for a in order:
+            for s in SHAPES:
+                if skip_reason(a, s) is None:
+                    cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    def append_out(rec: dict) -> None:
+        if not args.out:
+            return
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        with open(args.out, "w") as f:
+            json.dump(existing + [rec], f, indent=1)
+
+    records, failures = [], []
+    for arch, shape in cells:
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           skip_cost=args.skip_cost, policy=args.policy,
+                           overrides={"remat": False} if args.no_remat else None,
+                           label=args.label)
+            records.append(rec)
+            append_out(rec)
+        except Exception as e:  # a failure here is a sharding bug
+            traceback.print_exc()
+            failures.append({"arch": arch, "shape": shape, "error": repr(e)})
+            append_out(failures[-1])
+    print(f"\n{len(records)}/{len(cells)} cells OK; {len(failures)} failed")
+    if failures:
+        for f_ in failures:
+            print("FAILED:", f_["arch"], f_["shape"], f_["error"][:200])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Training launcher:  python -m repro.launch.train --arch <id> [options].
+
+On this CPU container, reduced configs train for real (smoke scale); on a
+TPU pod slice the full config trains under the production mesh with the
+same code path (``--mesh`` single/multi).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.models import param_count_analytic
+from repro.train import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="smoke-scale config (CPU container default)")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--mesh", choices=["none", "single", "multi"], default="none")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--micro-batch", type=int, default=4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    print(f"{args.arch}: {param_count_analytic(cfg)/1e6:.1f}M params "
+          f"({'reduced' if args.reduced else 'FULL'})")
+
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    tcfg = TrainerConfig(
+        lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+        total_steps=args.steps, micro_batch=args.micro_batch,
+        grad_accum=args.grad_accum, seq_len=args.seq_len,
+        ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 4, 1),
+        compress_grads=args.compress_grads,
+    )
+    trainer = Trainer(cfg, tcfg, mesh=mesh)
+    state, hist = trainer.run(args.steps)
+    for h in hist[:: max(len(hist) // 10, 1)]:
+        print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "
+              f"gnorm {h['grad_norm']:.2f}  lr {h['lr']:.2e}")
+    print(f"done: loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

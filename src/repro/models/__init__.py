@@ -1,0 +1,29 @@
+"""repro.models — composable LM stack shared by all 10 assigned archs."""
+from .config import ModelConfig, reduced
+from .model import (
+    active_param_count,
+    cache_specs,
+    count_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_count_analytic,
+    param_specs,
+)
+
+__all__ = [
+    "ModelConfig",
+    "reduced",
+    "active_param_count",
+    "cache_specs",
+    "count_params",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "param_count_analytic",
+    "param_specs",
+]

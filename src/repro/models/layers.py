@@ -1,0 +1,209 @@
+"""Shared neural-net layers (pure functional: init_* -> params dict,
+apply via plain functions).  Every init_* has a twin in ``specs_*``
+returning the PartitionSpec tree used by the launcher for pjit sharding:
+
+  logical sharding policy (see DESIGN.md §5):
+    * column-parallel weights  (d_in, d_out*)  -> P("data", "model")
+    * row-parallel weights     (d_in*, d_out)  -> P("model", "data")
+    * embeddings               (vocab, d)      -> P("model", "data")
+    * experts                  (E, ...)        -> P("model", "data", None)
+    * norms / scalars                          -> replicated
+  the "data" entry on the non-TP dim is FSDP-style parameter sharding
+  (ZeRO-3 for params, and the optimizer state inherits it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def _fsdp_dim(shape: tuple[int, ...], tp_dim: int | None) -> int | None:
+    """Pick the largest non-TP dim as the FSDP ('data') shard dim."""
+    best, best_sz = None, 1
+    for i, s in enumerate(shape):
+        if i == tp_dim:
+            continue
+        if s > best_sz:
+            best, best_sz = i, s
+    return best
+
+
+# --- sharding policy (perf-hillclimb knob; see EXPERIMENTS.md §Perf) -------
+#   "2d"      : Megatron TP on the 'model' axis + ZeRO-3 FSDP on 'data'
+#   "fsdp"    : no TP — weights sharded over BOTH axes (pure ZeRO-3);
+#               right for small models where TP collectives dominate
+#   "tp_only" : TP on 'model', weights replicated over 'data'
+_POLICY = {"value": "2d"}
+
+
+def set_sharding_policy(policy: str) -> None:
+    assert policy in ("2d", "fsdp", "tp_only"), policy
+    _POLICY["value"] = policy
+
+
+def get_sharding_policy() -> str:
+    return _POLICY["value"]
+
+
+def matrix_spec(shape: tuple[int, ...], tp_dim: int | None) -> P:
+    """PartitionSpec for a weight matrix under the active policy."""
+    policy = _POLICY["value"]
+    entries: list = [None] * len(shape)
+    if policy == "fsdp":
+        fs = _fsdp_dim(shape, None)
+        if fs is not None:
+            entries[fs] = ("data", "model")
+        # second-largest dim over the remaining axis for better balance
+        fs2 = _fsdp_dim(shape, fs)
+        return P(*entries)
+    if tp_dim is not None:
+        entries[tp_dim] = "model"
+    if policy == "2d":
+        fs = _fsdp_dim(shape, tp_dim)
+        if fs is not None:
+            entries[fs] = "data"
+    return P(*entries)
+
+
+def replicated_spec(shape: tuple[int, ...]) -> P:
+    return P(*([None] * len(shape)))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def specs_rmsnorm():
+    return {"scale": P(None)}
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rms_core(x, scale, eps: float):
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rms_fwd(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    out = (xf * inv * scale.astype(jnp.float32)).astype(x.dtype)
+    return out, (x, scale, inv)
+
+
+def _rms_bwd(eps, res, g):
+    """Keeps the boundary cotangent in the activation dtype so the TP
+    all-reduce of dx runs in bf16, not f32 — halves the dominant train
+    collective (EXPERIMENTS.md §Perf iteration 1).  Internals stay f32."""
+    x, scale, inv = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    sf = scale.astype(jnp.float32)
+    d = x.shape[-1]
+    gs = gf * sf
+    dot = jnp.sum(gs * xf, axis=-1, keepdims=True)
+    dx = inv * gs - (inv**3) * xf * (dot / d)
+    dscale = jnp.sum(gf * xf * inv, axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dscale.astype(scale.dtype)
+
+
+_rms_core.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rms_norm(x, params, eps: float):
+    return _rms_core(x, params["scale"], eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh) with positions (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # (dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    angles = angles[..., :, None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(k1, d_model, d_ff, dtype),
+        "down": dense_init(k2, d_ff, d_model, dtype),
+    }
+    if act == "swiglu":
+        p["gate"] = dense_init(k3, d_model, d_ff, dtype)
+    return p
+
+
+def specs_mlp(d_model: int, d_ff: int, act: str):
+    s = {
+        "up": matrix_spec((d_model, d_ff), tp_dim=1),
+        "down": matrix_spec((d_ff, d_model), tp_dim=0),
+    }
+    if act == "swiglu":
+        s["gate"] = matrix_spec((d_model, d_ff), tp_dim=1)
+    return s
+
+
+def mlp(x, params, act: str):
+    up = x @ params["up"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["gate"]) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# embedding + lm head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype):
+    # 1/sqrt(d) keeps tied-head logits at unit variance
+    return {"table": dense_init(key, vocab, d_model, dtype)}
+
+
+def specs_embed(vocab: int, d_model: int):
+    return {"table": matrix_spec((vocab, d_model), tp_dim=0)}
+
+
+def embed(tokens, params):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(x, params):
+    """Logits in f32 (loss numerics)."""
+    return x.astype(jnp.float32) @ params["table"].T.astype(jnp.float32)

@@ -1,0 +1,99 @@
+"""Activation sharding constraints.
+
+GSPMD propagates weight shardings into activations; without explicit
+anchors it can prefer feature-sharded (FSDP-layout) activations over
+batch-sharded ones, replicating the global batch on every device.  The
+launcher pins the ambient (mesh, dp-axes) here and the model calls
+``shard_batch`` at the canonical anchor points (post-embed, per-block
+output, logits) — the standard MaxText-style activation partitioning.
+
+Host-local training (tests, examples) leaves the context unset: the
+helpers are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_STATE: dict = {"mesh": None, "dp": ()}
+
+
+def set_activation_mesh(mesh: Optional[Mesh], dp_axes: tuple[str, ...] = ()):
+    _STATE["mesh"] = mesh
+    _STATE["dp"] = tuple(dp_axes)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh], dp_axes: tuple[str, ...]):
+    old = dict(_STATE)
+    set_activation_mesh(mesh, dp_axes)
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axes is None:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n
+
+
+def shard_batch(x: jax.Array, extra: tuple = ()) -> jax.Array:
+    """Constrain dim 0 to the dp axes (remaining dims from ``extra`` or
+    replicated).  Entries that don't divide their dim degrade to None.
+    No-op when no mesh is set (host-local runs)."""
+    mesh, dp = _STATE["mesh"], _STATE["dp"]
+    if mesh is None or not dp:
+        return x
+    used = set(dp)
+    extra = tuple(
+        None if (e is None or (e if isinstance(e, tuple) else (e,))[0] in used)
+        else e
+        for e in extra
+    )  # an axis may appear at most once in a spec (fsdp puts model on batch)
+    raw = (dp,) + extra + (None,) * (x.ndim - 1 - len(extra))
+    entries = tuple(
+        e if e is not None and x.shape[i] % _axis_size(mesh, e) == 0 else None
+        for i, e in enumerate(raw)
+    )
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries))
+    )
+
+
+def shard_logits(x: jax.Array) -> jax.Array:
+    """(B, S, V) or (B, V) logits: batch→dp, vocab→model."""
+    return shard_batch(x, extra=(None,) * (x.ndim - 2) + ("model",))
+
+
+def shard_moe_buffer(h: jax.Array) -> jax.Array:
+    """(E, C, d) expert-parallel dispatch buffer: experts→model, rows→dp."""
+    mesh, dp = _STATE["mesh"], _STATE["dp"]
+    if mesh is None or not dp:
+        return h
+    entries = []
+    for i, e in enumerate(("model", dp, None)):
+        ok = e is not None and h.shape[i] % _axis_size(mesh, e) == 0
+        entries.append(e if ok else None)
+    return jax.lax.with_sharding_constraint(h, NamedSharding(mesh, P(*entries)))
+
+
+def shard_heads(x: jax.Array, head_axis: int) -> jax.Array:
+    """Activation with a head-like dim (SSD heads, attention heads):
+    batch→dp, head_axis→model."""
+    mesh, dp = _STATE["mesh"], _STATE["dp"]
+    if mesh is None or not dp:
+        return x
+    extra = [None] * (x.ndim - 1)
+    extra[head_axis - 1] = "model"
+    return shard_batch(x, extra=tuple(extra))

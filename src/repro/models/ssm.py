@@ -1,0 +1,210 @@
+"""Mamba2 mixer via the SSD (state-space duality) chunked form.
+
+Faithful to the Mamba2 "minimal SSD" formulation: the sequence is split
+into chunks; within a chunk the recurrence is materialised as a masked
+(attention-like) quadratic form, between chunks a tiny per-head state
+(p × n) is decayed and passed — matmul-dominated, which is exactly why the
+paper's Hilbert matmul scheduling applies to the SSD GEMMs (see DESIGN.md
+§Arch-applicability).
+
+Decode is the constant-memory recurrence: per-layer state (B, H, p, n) +
+a (w-1)-deep conv ring — no KV growth, which is what makes the
+``long_500k`` shape runnable for ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import dense_init, init_rmsnorm, matrix_spec, rms_norm, specs_rmsnorm
+
+
+def _conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state  # x ++ B ++ C (single group)
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * n + h  # z, x, B, C, dt
+    p = {
+        "in_proj": dense_init(ks[0], d, in_dim, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, _conv_dim(cfg))) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((_conv_dim(cfg),), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": init_rmsnorm(di, dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+    return p
+
+
+def specs_mamba2(cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    return {
+        "in_proj": matrix_spec((d, 2 * di + 2 * cfg.ssm_state + cfg.ssm_heads), tp_dim=1),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "norm": specs_rmsnorm(),
+        "out_proj": matrix_spec((di, d), tp_dim=0),
+    }
+
+
+def _split_in(proj, cfg: ModelConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt = jnp.split(proj, [di, di + di + 2 * n], axis=-1)
+    return z, xbc, dt  # xbc = x ++ B ++ C
+
+
+def _causal_conv(xbc, w, b, width: int):
+    """Depthwise causal conv along seq: xbc (B, L, C)."""
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a):
+    """Stable 'segment sum': out[..., i, j] = sum_{j<t<=i} a[..., t],
+    masked to -inf for j > i.  a: (..., q)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """SSD scan.  x: (b,l,h,p); dt: (b,l,h); A: (h,) negative;
+    B, C: (b,l,n) single group broadcast over heads.  Returns (b,l,h,p)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-l) % chunk
+    if pad:  # right-pad; dt=0 ⇒ decay 1 and zero input ⇒ exact no-op
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        l_out, l = l, l + pad
+    else:
+        l_out = l
+    c = l // chunk
+    xd = x * dt[..., None]  # discretised input
+    a = dt * A[None, None, :]  # (b,l,h) log-decay
+    # chunked views
+    xc = xd.reshape(b, c, chunk, h, p)
+    Bc = B.reshape(b, c, chunk, n)
+    Cc = C.reshape(b, c, chunk, n)
+    ac = a.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,q)
+    a_cs = jnp.cumsum(ac, axis=-1)  # (b,h,c,q)
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(ac))  # (b,h,c,q,q)
+    Y_diag = jnp.einsum(
+        "bcln,bcsn,bhcls,bcshp->bclhp",
+        Cc.astype(jnp.float32), Bc.astype(jnp.float32), L, xc.astype(jnp.float32),
+    )
+
+    # 2. chunk states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)  # (b,h,c,q)
+    states = jnp.einsum(
+        "bcln,bhcl,bclhp->bchpn",
+        Bc.astype(jnp.float32), decay_states, xc.astype(jnp.float32),
+    )
+
+    # 3. inter-chunk recurrence
+    a_last = a_cs[..., -1]  # (b,h,c)
+    pad = jnp.pad(a_last, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(pad))  # (b,h,c+1,c+1)
+    states0 = jnp.concatenate(
+        [jnp.zeros_like(states[:, :1]), states], axis=1
+    )  # (b,c+1,h,p,n)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states0)
+    prev_states = new_states[:, :-1]  # (b,c,h,p,n)
+
+    # 4. state -> output
+    state_decay = jnp.exp(a_cs)  # (b,h,c,q)
+    Y_off = jnp.einsum(
+        "bcln,bchpn,bhcl->bclhp", Cc.astype(jnp.float32), prev_states, state_decay
+    )
+    y = (Y_diag + Y_off).reshape(b, l, h, p)
+    y = (y + D[None, None, :, None] * x.astype(jnp.float32)).astype(x.dtype)
+    return y[:, :l_out]
+
+
+def mamba2_forward(params, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d)."""
+    Bsz, S, d = x.shape
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_in(proj, cfg)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"], cfg.ssm_conv_width)
+    di, n = cfg.d_inner, cfg.ssm_state
+    xs, Bs, Cs = jnp.split(xbc, [di, di + n], axis=-1)
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    dt_full = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )
+    A = -jnp.exp(params["A_log"])  # (h,) negative
+    y = ssd_chunked(
+        xs.reshape(Bsz, S, h, p), dt_full, A, Bs, Cs, params["D"], cfg.ssm_chunk
+    )
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# decode: constant-memory recurrence
+# ---------------------------------------------------------------------------
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "state": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, _conv_dim(cfg)), dtype),
+    }
+
+
+def mamba2_cache_specs(cfg: ModelConfig):
+    return {
+        "state": P(("pod", "data"), "model", None, None),
+        "conv": P(("pod", "data"), None, "model"),
+    }
+
+
+def mamba2_decode(params, x, cfg: ModelConfig, cache):
+    """x: (B, 1, d).  Returns (out (B,1,d), cache)."""
+    Bsz = x.shape[0]
+    proj = x[:, 0] @ params["in_proj"]  # (B, in_dim)
+    z, xbc, dt = _split_in(proj, cfg)
+    # conv ring: window = [cache, new]
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,w,C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", win, params["conv_w"]) + params["conv_b"]
+    )
+    new_conv = win[:, 1:]
+    di, n = cfg.d_inner, cfg.ssm_state
+    xs, Bs, Cs = jnp.split(conv_out, [di, di + n], axis=-1)
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    dt_full = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, :])  # (B,h)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt_full * A[None, :])  # (B,h)
+    xh = xs.reshape(Bsz, h, p).astype(jnp.float32)
+    upd = jnp.einsum(
+        "bh,bhp,bn->bhpn", dt_full, xh, Bs.astype(jnp.float32)
+    )
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cs.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, None, :]), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"], {"state": state, "conv": new_conv}

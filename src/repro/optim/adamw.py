@@ -1,0 +1,120 @@
+"""AdamW (decoupled weight decay) + LR schedules + int8 grad compression.
+
+Built from scratch (no optax in the image).  State is a pytree mirroring
+params; the launcher shards it with the same PartitionSpecs as the
+parameters (FSDP dims included), which is ZeRO-style optimizer-state
+sharding for free.
+
+``quantize_int8``/``dequantize_int8`` implement the 1-byte gradient
+compression used by the trainer's compressed-all-reduce option: per-tensor
+absmax scaling, stochastic-rounding-free (deterministic) symmetric int8.
+On a 3D torus this turns the DP all-reduce from 2 bytes/param to 1 byte
+(bf16 grads) at <1e-2 relative error (asserted in tests).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # int32 scalar
+    m: Any  # pytree f32
+    v: Any  # pytree f32
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=zeros,
+        v=jax.tree.map(jnp.copy, zeros),
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    """Returns (new_params, new_state).  lr: scalar array or float."""
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def cosine_schedule(
+    base_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+):
+    """step -> lr (jnp scalar), linear warmup then cosine decay."""
+
+    def lr_at(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = base_lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        t = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+
+    return lr_at
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression (distributed-optimization trick)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(tree):
+    """pytree -> (int8 pytree, f32 scales pytree)."""
+
+    def q(x):
+        x = x.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8), scale
+
+    leaves, treedef = jax.tree.flatten(tree)
+    qs = [q(x) for x in leaves]
+    return (
+        treedef.unflatten([a for a, _ in qs]),
+        treedef.unflatten([s for _, s in qs]),
+    )
+
+
+def dequantize_int8(qtree, scales):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, qtree, scales
+    )

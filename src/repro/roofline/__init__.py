@@ -1,0 +1,15 @@
+from .analysis import (
+    analyze_cell,
+    collective_bytes,
+    cost_record,
+    extrapolate_depth,
+    roofline_report,
+)
+
+__all__ = [
+    "analyze_cell",
+    "collective_bytes",
+    "cost_record",
+    "extrapolate_depth",
+    "roofline_report",
+]

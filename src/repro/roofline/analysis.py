@@ -1,0 +1,229 @@
+"""Roofline terms from compiled dry-run artifacts (no hardware needed).
+
+Per (arch, shape, mesh):
+    compute term    = HLO_FLOPs  / (chips × 197 TFLOP/s bf16)
+    memory term     = HLO_bytes  / (chips × 819 GB/s HBM)
+    collective term = coll_bytes / (chips × 50 GB/s/link)
+
+Methodology notes (also in EXPERIMENTS.md):
+
+* XLA's ``cost_analysis()`` counts a while-loop body ONCE, so a scanned
+  L-layer stack under-reports by ~L×.  The dry-run therefore compiles two
+  shallow *unrolled* twins (depths d1 < d2, multiples of the arch's layer
+  period) and extrapolates linearly:  per_layer = (c(d2)-c(d1))/(d2-d1),
+  total = c(d1) + (L-d1)·per_layer.  Exact for homogeneous stacks.
+* ``cost_analysis`` on an SPMD module reports per-device numbers.
+* collective bytes are parsed from the compiled HLO: per-device result
+  bytes of all-gather/all-reduce/reduce-scatter/all-to-all/
+  collective-permute (all-reduce doubled for the ring).
+* the CPU backend fuses far less than the TPU backend, so HLO "bytes
+  accessed" OVERSTATES TPU HBM traffic.  We report it verbatim AND an
+  analytic lower-bound memory model (params + optimizer + activations +
+  KV-cache traffic); the bottleneck call uses the analytic term.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import numpy as np
+
+# TPU v5e-class constants (per assignment)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-collective-kind byte totals (per-device result sizes)."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[^)]*?\)?)\s*([\w-]+)\(", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if kind == c or kind.startswith(c + "-"):
+                base = c
+                break
+        if base is None:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        if base == "all-reduce":
+            nbytes *= 2  # ring: each element leaves and re-enters the chip
+        out[base] += nbytes
+        out["count"] += 1
+    out["total"] = float(sum(out[c] for c in _COLLECTIVES))
+    return out
+
+
+def cost_record(compiled) -> dict[str, float]:
+    """Raw per-device cost numbers of one compiled module."""
+    ca = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_total": coll["total"],
+        "coll_detail": {k: coll[k] for k in _COLLECTIVES},
+        "coll_count": coll["count"],
+    }
+
+
+def extrapolate_depth(c1: dict, c2: dict, d1: int, d2: int, L: int) -> dict:
+    """Linear-in-depth extrapolation of cost records to L layers.
+
+    Per-layer slopes are clamped at 0: CSE across unrolled layers can make
+    the shallow-module difference slightly negative for terms dominated by
+    the fixed (embed/logits) part."""
+    out: dict[str, Any] = {}
+
+    def extr(a, b):
+        per = max((b - a) / (d2 - d1), 0.0)
+        return max(a + (L - d1) * per, a), per
+
+    for k in ("flops", "bytes", "coll_total"):
+        out[k], out[k + "_per_layer"] = extr(c1[k], c2[k])
+    out["coll_detail"] = {
+        k: extr(c1["coll_detail"][k], c2["coll_detail"][k])[0]
+        for k in _COLLECTIVES
+    }
+    out["coll_count_shallow"] = c2["coll_count"]
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D train, 2·N_active·D inference."""
+    from repro.models import active_param_count
+
+    n_active = active_param_count(cfg)
+    if shape.mode == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/sequence
+
+
+def analytic_bytes(cfg, shape, chips: int) -> float:
+    """Per-device HBM-traffic lower bound (what a fused TPU program moves):
+    params/optimizer traffic + activation stream + cache traffic."""
+    from repro.models import param_count_analytic
+
+    n = param_count_analytic(cfg)
+    L, d = cfg.num_layers, cfg.d_model
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    if shape.mode == "train":
+        # params bf16 read + grad f32 write+read + m/v f32 read+write ×2
+        # + param write  ≈ 2 + 4·2 + 16 + 2
+        param_traffic = 28.0 * n
+        act_traffic = 16.0 * tokens * d * L  # fwd save + bwd read, bf16-ish
+    elif shape.mode == "prefill":
+        param_traffic = 2.0 * n
+        act_traffic = 8.0 * tokens * d * L
+    else:  # decode
+        param_traffic = 2.0 * n
+        act_traffic = 8.0 * tokens * d * L
+        # KV/state cache read per token
+        if cfg.block_kind == "mamba2":
+            cache = 4.0 * shape.global_batch * cfg.ssm_heads * cfg.ssm_head_dim \
+                * cfg.ssm_state * L
+        elif cfg.is_mla:
+            cache = 2.0 * shape.global_batch * shape.seq_len \
+                * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * L
+        else:
+            cache = 2.0 * shape.global_batch * shape.seq_len * 2 \
+                * cfg.num_kv_heads * cfg.attn_head_dim * L
+        act_traffic += cache
+    return (param_traffic + act_traffic) / chips
+
+
+def analyze_cell(
+    full_compiled, cost_extrap: dict, cfg, shape, mesh
+) -> dict[str, Any]:
+    chips = int(np.prod(mesh.devices.shape))
+    flops_dev = cost_extrap["flops"]
+    bytes_dev_hlo = cost_extrap["bytes"]
+    coll_dev = cost_extrap["coll_total"]
+    mf = model_flops(cfg, shape)
+    bytes_dev_analytic = analytic_bytes(cfg, shape, chips)
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_mem_hlo = bytes_dev_hlo / HBM_BW
+    t_mem = bytes_dev_analytic / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mfu = (mf / chips / PEAK_FLOPS) / step_time if step_time > 0 else 0.0
+
+    mem = full_compiled.memory_analysis()
+    mem_per_dev = (
+        getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0)
+    )
+
+    return {
+        "chips": chips,
+        "flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev_hlo,
+        "analytic_bytes_per_device": bytes_dev_analytic,
+        "collective_bytes_per_device": coll_dev,
+        "collectives": cost_extrap["coll_detail"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_mem,
+        "t_memory_hlo_s": t_mem_hlo,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / chips / max(flops_dev, 1.0),
+        "roofline_fraction_mfu": mfu,
+        "memory_per_device_bytes": int(mem_per_dev),
+        "fits_hbm_16g": bool(mem_per_dev <= 16 * 2**30),
+    }
+
+
+def roofline_report(rec: dict[str, Any]) -> str:
+    if rec.get("skipped"):
+        return f"   SKIPPED: {rec['skipped']}"
+    return (
+        f"   roofline: compute={rec['t_compute_s']*1e3:.2f}ms "
+        f"memory={rec['t_memory_s']*1e3:.2f}ms "
+        f"(hlo {rec['t_memory_hlo_s']*1e3:.2f}ms) "
+        f"collective={rec['t_collective_s']*1e3:.2f}ms "
+        f"-> {rec['bottleneck']}-bound "
+        f"mfu~{rec['roofline_fraction_mfu']*100:.1f}% "
+        f"useful-flops={min(rec['useful_flops_ratio'],9.99)*100:.0f}% "
+        f"hbm/dev={rec['memory_per_device_bytes']/2**30:.2f}GiB "
+        f"fits16G={rec['fits_hbm_16g']}"
+    )

@@ -1,0 +1,84 @@
+"""Assemble the final EXPERIMENTS.md tables from the dry-run JSONs.
+
+Usage: PYTHONPATH=src python -m repro.roofline.finalize
+Reads results/dryrun_single_baseline.json, results/dryrun_optimized.json,
+results/dryrun_multi.json (+ prefill fix), writes the tables between the
+DRYRUN markers of EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .report import fmt_table
+
+ORDER = [
+    "hubert-xlarge", "tinyllama-1.1b", "stablelm-1.6b", "zamba2-2.7b",
+    "mamba2-2.7b", "olmoe-1b-7b", "minitron-8b", "qwen2.5-14b",
+    "chameleon-34b", "deepseek-v2-236b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _key(r):
+    return (ORDER.index(r["arch"]), SHAPE_ORDER.index(r["shape"]))
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _dedupe_last(records):
+    out = {}
+    for r in records:
+        if "arch" in r and "shape" in r:
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def main() -> None:
+    base = _dedupe_last(_load("results/dryrun_single_baseline.json"))
+    opt = _dedupe_last(_load("results/dryrun_optimized.json"))
+    multi = _dedupe_last(_load("results/dryrun_multi.json"))
+    if os.path.exists("results/dryrun_multi_prefill_fix.json"):
+        multi.update(_dedupe_last(_load("results/dryrun_multi_prefill_fix.json")))
+
+    # optimized table: train rows from the optimized sweep; prefill/decode
+    # keep the 2d serving layout == baseline rows (fsdp-prefill refuted);
+    # MoE train/prefill rows from the shard_map-EP re-measure (iter A4)
+    final_opt = {}
+    for k, r in base.items():
+        final_opt[k] = opt[k] if k[1] == "train_4k" and k in opt else r
+    if os.path.exists("results/dryrun_moe_ep.json"):
+        final_opt.update(_dedupe_last(_load("results/dryrun_moe_ep.json")))
+
+    parts = []
+    parts.append("### Roofline — paper-faithful baseline (single pod 16×16, policy 2d)\n")
+    parts.append(fmt_table(sorted(base.values(), key=_key)))
+    parts.append("\n### Roofline — optimized (per-arch policy: ZeRO-3 for dense training, 2d serving/MoE)\n")
+    parts.append(fmt_table(sorted(final_opt.values(), key=_key)))
+    parts.append("\n### Multi-pod compile proof (2×16×16 = 512 chips, --skip-cost)\n")
+    mrows = ["| arch | shape | compile | HBM/dev (GiB) |", "|---|---|---|---|"]
+    for r in sorted(multi.values(), key=_key):
+        if "error" in r:
+            mrows.append(f"| {r['arch']} | {r['shape']} | FAILED | — |")
+        else:
+            mem = r.get("memory_per_device_bytes", 0) / 2**30
+            mrows.append(f"| {r['arch']} | {r['shape']} | ok | {mem:.2f} |")
+    parts.append("\n".join(mrows))
+    block = "\n".join(parts)
+
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    pre, rest = doc.split("<!-- DRYRUN:BEGIN -->")
+    _, post = rest.split("<!-- DRYRUN:END -->")
+    doc = pre + "<!-- DRYRUN:BEGIN -->\n" + block + "\n<!-- DRYRUN:END -->" + post
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md tables updated "
+          f"({len(base)} baseline, {len(final_opt)} optimized, {len(multi)} multi-pod rows)")
+
+
+if __name__ == "__main__":
+    main()

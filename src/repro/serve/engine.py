@@ -1,0 +1,146 @@
+"""Batched serving engine with continuous batching over KV-cache slots.
+
+One fixed-size decode batch (``num_slots`` rows) steps every iteration;
+requests are attached to free slots with their own position counters
+(the per-slot ``pos`` vector the model's decode path supports), so new
+requests join mid-flight without draining the batch — continuous batching.
+
+Prefill is chunk-free here (token-by-token through the decode path, which
+is exact) — the compiled ``forward`` prefill + cache scatter is the
+production path for long prompts and is what the ``prefill_32k`` dry-run
+cell lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, decode_step, init_cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        *,
+        num_slots: int = 4,
+        max_len: int = 256,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        assert not cfg.encoder_only, "encoder-only archs have no decode path"
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.cache = init_cache(cfg, num_slots, max_len)
+        self.pos = np.zeros((num_slots,), dtype=np.int32)
+        self.slot_req: list[Request | None] = [None] * num_slots
+        self.next_token = np.zeros((num_slots,), dtype=np.int32)
+        self.active = np.zeros((num_slots,), dtype=bool)
+        self.key = jax.random.PRNGKey(seed)
+        self._rid = 0
+        self._queue: list[Request] = []
+
+        def masked_step(p, t, c, pos, mask):
+            """Decode one token; slots with mask=False keep their cache
+            untouched (recurrent SSM states must not see filler tokens)."""
+            logits, new_c = decode_step(p, t, c, pos, cfg)
+
+            def merge(old, new):
+                m = mask.reshape((1, -1) + (1,) * (old.ndim - 2))
+                return jnp.where(m, new, old)
+
+            return logits, jax.tree.map(merge, c, new_c)
+
+        self._step = jax.jit(masked_step)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: list[int], max_new: int = 16) -> Request:
+        req = Request(rid=self._rid, prompt=list(prompt), max_new=max_new)
+        self._rid += 1
+        self._queue.append(req)
+        return req
+
+    def _attach(self) -> None:
+        for slot in range(self.num_slots):
+            if self.active[slot] or not self._queue:
+                continue
+            req = self._queue.pop(0)
+            self.slot_req[slot] = req
+            self.active[slot] = True
+            self.pos[slot] = 0
+            self._reset_slot(slot)
+            # prefill token-by-token through the decode path (exact)
+            for t in req.prompt[:-1]:
+                self._single_token(slot, t)
+            self.next_token[slot] = req.prompt[-1]
+
+    def _reset_slot(self, slot: int) -> None:
+        """Zero a slot's cache rows (recurrent states carry history)."""
+        self.cache = jax.tree.map(
+            lambda x: x.at[:, slot].set(jnp.zeros_like(x[:, slot])), self.cache
+        )
+
+    def _single_token(self, slot: int, token: int) -> None:
+        toks = np.zeros((self.num_slots, 1), dtype=np.int32)
+        toks[slot, 0] = token
+        mask = np.zeros((self.num_slots,), dtype=bool)
+        mask[slot] = True
+        logits, self.cache = self._step(
+            self.params, jnp.asarray(toks), self.cache, jnp.asarray(self.pos),
+            jnp.asarray(mask),
+        )
+        self.pos[slot] += 1
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One decode iteration across all active slots."""
+        self._attach()
+        if not self.active.any():
+            return
+        toks = self.next_token[:, None].astype(np.int32)
+        logits, self.cache = self._step(
+            self.params, jnp.asarray(toks), self.cache, jnp.asarray(self.pos),
+            jnp.asarray(self.active),
+        )
+        logits = np.asarray(logits)
+        if self.temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+            sampled = np.asarray(
+                jax.random.categorical(sub, jnp.asarray(logits) / self.temperature)
+            )
+        else:
+            sampled = logits.argmax(axis=-1)
+        for slot in range(self.num_slots):
+            if not self.active[slot]:
+                continue
+            self.pos[slot] += 1
+            req = self.slot_req[slot]
+            req.out.append(int(sampled[slot]))
+            self.next_token[slot] = sampled[slot]
+            if len(req.out) >= req.max_new or self.pos[slot] >= self.max_len - 1:
+                req.done = True
+                self.active[slot] = False
+                self.slot_req[slot] = None
+
+    def run_until_done(self, max_iters: int = 10_000) -> None:
+        it = 0
+        while (self._queue or self.active.any()) and it < max_iters:
+            self.step()
+            it += 1

@@ -1,0 +1,3 @@
+from .trainer import SimulatedFailure, Trainer, TrainerConfig
+
+__all__ = ["SimulatedFailure", "Trainer", "TrainerConfig"]

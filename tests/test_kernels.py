@@ -1,0 +1,232 @@
+"""Pallas kernel tests: shape/dtype sweeps against the pure-jnp oracles.
+
+All kernels run in interpret mode (CPU container; TPU is the target).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CURVES, tile_schedule, triangle_schedule
+from repro.kernels import ops, ref
+from repro.kernels.attention import causal_schedule, full_schedule
+
+RNG = np.random.default_rng(42)
+
+
+def rand(shape, dtype=jnp.float32, scale=1.0):
+    x = RNG.normal(size=shape) * scale
+    return jnp.asarray(x, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Matmul
+# ---------------------------------------------------------------------------
+
+class TestMatmul:
+    @pytest.mark.parametrize("curve", ["row", "zorder", "hilbert", "fur"])
+    def test_curves_agree(self, curve):
+        a, b = rand((128, 96)), rand((96, 160))
+        out = ops.matmul(a, b, curve=curve, bm=32, bn=32, bk=32, interpret=True)
+        np.testing.assert_allclose(out, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize(
+        "m,n,k", [(64, 64, 64), (128, 256, 64), (96, 64, 160), (32, 32, 32),
+                  (100, 84, 52), (256, 128, 384)]
+    )
+    def test_shape_sweep(self, m, n, k):
+        a, b = rand((m, k)), rand((k, n))
+        out = ops.matmul(a, b, bm=32, bn=32, bk=32, interpret=True)
+        np.testing.assert_allclose(out, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep(self, dtype):
+        a, b = rand((128, 128), dtype), rand((128, 128), dtype)
+        out = ops.matmul(a, b, bm=64, bn=64, bk=64, interpret=True)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), ref.matmul(a, b).astype(jnp.float32),
+            rtol=tol, atol=tol,
+        )
+
+    def test_nonsquare_tile_grid(self):
+        # d_ff/d_model-like aspect ratio (non-pow2 tile grid -> FUR overlay)
+        a, b = rand((64, 352)), rand((352, 192))
+        out = ops.matmul(a, b, curve="fur", bm=32, bn=32, bk=32, interpret=True)
+        np.testing.assert_allclose(out, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention + jump-over
+# ---------------------------------------------------------------------------
+
+class TestAttention:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("S", [128, 256])
+    def test_vs_oracle(self, causal, S):
+        B, H, D = 2, 2, 64
+        q, k, v = rand((B, H, S, D)), rand((B, H, S, D)), rand((B, H, S, D))
+        out = ops.attention(q, k, v, causal=causal, bq=64, bkv=64, interpret=True)
+        want = ref.attention(
+            q.reshape(B * H, S, D), k.reshape(B * H, S, D), v.reshape(B * H, S, D),
+            causal=causal,
+        ).reshape(B, H, S, D)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_gqa_expansion(self):
+        B, H, Hkv, S, D = 1, 4, 2, 128, 32
+        q = rand((B, H, S, D))
+        k, v = rand((B, Hkv, S, D)), rand((B, Hkv, S, D))
+        out = ops.attention(q, k, v, causal=True, bq=64, bkv=64, interpret=True)
+        kf = jnp.repeat(k, 2, axis=1).reshape(B * H, S, D)
+        vf = jnp.repeat(v, 2, axis=1).reshape(B * H, S, D)
+        want = ref.attention(q.reshape(B * H, S, D), kf, vf, causal=True)
+        np.testing.assert_allclose(out.reshape(B * H, S, D), want, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("serpentine", [True, False])
+    def test_serpentine_invariance(self, serpentine):
+        # online softmax is kv-order-free: serpentine == ascending
+        B, H, S, D = 1, 1, 256, 32
+        q, k, v = rand((B, H, S, D)), rand((B, H, S, D)), rand((B, H, S, D))
+        out = ops.attention(q, k, v, causal=True, bq=64, bkv=64,
+                            serpentine=serpentine, interpret=True)
+        want = ref.attention(q[0], k[0], v[0], causal=True)[None]
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_jumpover_schedule_step_count(self):
+        # the schedule enumerates exactly the lower-triangle tiles:
+        # qt*(qt+1)/2 steps instead of qt^2 (the jump-over saving)
+        qt = 8
+        sched = causal_schedule(qt, None)
+        assert len(sched) == qt * (qt + 1) // 2
+        assert (sched[:, 1] <= sched[:, 0]).all()
+        full = full_schedule(qt, qt)
+        assert len(full) == qt * qt
+
+    def test_schedule_first_last_flags(self):
+        sched = causal_schedule(5, None, serpentine=True)
+        for q in range(5):
+            rows = sched[sched[:, 0] == q]
+            assert rows[0, 2] == 1 and rows[-1, 3] == 1
+            assert rows[1:, 2].sum() == 0 and rows[:-1, 3].sum() == 0
+            assert sorted(rows[:, 1].tolist()) == list(range(q + 1))
+
+
+# ---------------------------------------------------------------------------
+# k-Means
+# ---------------------------------------------------------------------------
+
+class TestKmeans:
+    @pytest.mark.parametrize("curve", ["row", "hilbert", "fur"])
+    def test_assign_vs_oracle(self, curve):
+        x, c = rand((512, 16)), rand((96, 16))
+        d2, assign = ops.kmeans_assign(x, c, curve=curve, bp=128, bc=32,
+                                       interpret=True)
+        want_d2, want_assign = ref.kmeans_assign(x, c)
+        np.testing.assert_array_equal(assign, want_assign)
+        np.testing.assert_allclose(d2, want_d2, rtol=1e-4, atol=1e-4)
+
+    def test_padding(self):
+        x, c = rand((500, 8)), rand((10, 8))
+        d2, assign = ops.kmeans_assign(x, c, bp=128, bc=16, interpret=True)
+        want_d2, want_assign = ref.kmeans_assign(x, c)
+        np.testing.assert_array_equal(assign, want_assign)
+        np.testing.assert_allclose(d2, want_d2, rtol=1e-4, atol=1e-4)
+
+    def test_lloyd_converges(self):
+        # 4 well-separated blobs -> lloyd recovers them
+        centers = np.array([[0, 0], [10, 0], [0, 10], [10, 10]], dtype=np.float32)
+        pts = np.concatenate(
+            [RNG.normal(size=(64, 2)) * 0.2 + c for c in centers]
+        ).astype(np.float32)
+        c, assign = ops.kmeans_lloyd(jnp.asarray(pts), 4, iters=8, interpret=True)
+        # every blob maps to a single cluster
+        a = np.asarray(assign).reshape(4, 64)
+        assert all(len(set(row.tolist())) == 1 for row in a)
+        assert len({row[0] for row in a}) == 4
+
+
+# ---------------------------------------------------------------------------
+# Similarity join
+# ---------------------------------------------------------------------------
+
+class TestSimjoin:
+    @pytest.mark.parametrize("curve", ["row", "hilbert"])
+    def test_counts_vs_oracle(self, curve):
+        x = rand((384, 8), scale=0.7)
+        out = ops.simjoin_counts(x, eps=1.0, curve=curve, bp=128, interpret=True)
+        np.testing.assert_array_equal(out, ref.simjoin_counts(x, 1.0))
+
+    def test_padding_and_total_symmetry(self):
+        x = rand((300, 4), scale=0.5)
+        out = ops.simjoin_counts(x, eps=0.8, bp=128, interpret=True)
+        want = ref.simjoin_counts(x, 0.8)
+        np.testing.assert_array_equal(out, want)
+        assert int(out.sum()) % 2 == 0  # unordered pairs counted twice total
+
+
+# ---------------------------------------------------------------------------
+# Floyd-Warshall
+# ---------------------------------------------------------------------------
+
+class TestFloydWarshall:
+    @pytest.mark.parametrize("curve", ["row", "hilbert"])
+    @pytest.mark.parametrize("n,b", [(64, 16), (96, 32)])
+    def test_vs_oracle(self, curve, n, b):
+        # random sparse digraph
+        w = RNG.uniform(1, 10, size=(n, n)).astype(np.float32)
+        mask = RNG.uniform(size=(n, n)) < 0.15
+        d = np.where(mask, w, np.inf).astype(np.float32)
+        np.fill_diagonal(d, 0.0)
+        out = ops.floyd_warshall(jnp.asarray(d), b=b, curve=curve, interpret=True)
+        want = ref.floyd_warshall(jnp.asarray(d))
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Cholesky
+# ---------------------------------------------------------------------------
+
+class TestCholesky:
+    @pytest.mark.parametrize("curve", ["row", "hilbert"])
+    @pytest.mark.parametrize("n,b", [(64, 16), (128, 32)])
+    def test_vs_oracle(self, curve, n, b):
+        m = RNG.normal(size=(n, n)).astype(np.float32)
+        a = m @ m.T + n * np.eye(n, dtype=np.float32)
+        out = ops.cholesky(jnp.asarray(a), b=b, curve=curve, interpret=True)
+        want = ref.cholesky(jnp.asarray(a))
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_reconstruction(self):
+        n, b = 96, 32
+        m = RNG.normal(size=(n, n)).astype(np.float32)
+        a = m @ m.T + n * np.eye(n, dtype=np.float32)
+        L = ops.cholesky(jnp.asarray(a), b=b, interpret=True)
+        np.testing.assert_allclose(L @ L.T, a, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Device-side codec matches host codec
+# ---------------------------------------------------------------------------
+
+class TestJaxCodec:
+    def test_encode_decode_match_numpy(self):
+        from repro.core import (hilbert_decode, hilbert_decode_jax,
+                                hilbert_encode, hilbert_encode_jax)
+
+        i = RNG.integers(0, 1 << 10, size=512)
+        j = RNG.integers(0, 1 << 10, size=512)
+        h_np = hilbert_encode(i, j, nbits=10)
+        h_jx = hilbert_encode_jax(jnp.asarray(i, jnp.int32), jnp.asarray(j, jnp.int32), nbits=10)
+        np.testing.assert_array_equal(np.asarray(h_jx), h_np)
+        i2, j2 = hilbert_decode_jax(h_jx, nbits=10)
+        np.testing.assert_array_equal(np.asarray(i2), i)
+        np.testing.assert_array_equal(np.asarray(j2), j)
+
+    def test_zorder_jax(self):
+        from repro.core import zorder_encode, zorder_encode_jax
+
+        i = RNG.integers(0, 1 << 15, size=256)
+        j = RNG.integers(0, 1 << 15, size=256)
+        z = zorder_encode_jax(jnp.asarray(i, jnp.int32), jnp.asarray(j, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(z), zorder_encode(i, j))
