@@ -17,12 +17,16 @@ import numpy as np
 from repro.core import (
     gray_encode,
     hilbert_decode,
+    hilbert_decode_nd,
     hilbert_encode,
     hilbert_encode_jax,
+    hilbert_encode_nd,
+    hilbert_encode_nd_jax,
     hilbert_path_recursive,
     hilbert_path_vectorised,
     peano_encode,
     zorder_encode,
+    zorder_encode_nd,
 )
 
 
@@ -65,6 +69,25 @@ def run() -> list[dict]:
     add("hilbert_encode_jax",
         _rate(lambda: enc(*ij32).block_until_ready(), N),
         "device-side fori_loop codec")
+
+    # d-dimensional codec (Butz/Lawder rotate-reflect), d in {2, 3}
+    for d, nb in ((2, 14), (3, 9)):
+        c = rng.integers(0, 1 << nb, size=(N, d))
+        h_nd = np.asarray(hilbert_encode_nd(c, nb))
+        add(f"hilbert_encode_nd_d{d}",
+            _rate(lambda c=c, nb=nb: hilbert_encode_nd(c, nb), N),
+            f"d={d} rotate-reflect, vectorised")
+        add(f"hilbert_decode_nd_d{d}",
+            _rate(lambda h=h_nd, d=d, nb=nb: hilbert_decode_nd(h, d, nb), N))
+        add(f"zorder_encode_nd_d{d}",
+            _rate(lambda c=c, nb=nb: zorder_encode_nd(c, nb), N),
+            f"d={d} generic bit interleave")
+        c32 = jnp.asarray(c, jnp.int32)
+        encd = jax.jit(lambda x, nb=nb: hilbert_encode_nd_jax(x, nb))
+        encd(c32).block_until_ready()
+        add(f"hilbert_encode_nd_jax_d{d}",
+            _rate(lambda: encd(c32).block_until_ready(), N),
+            f"d={d} device-side fori_loop codec")
 
     # curve generation (pairs/s)
     order = 9  # 512x512 = 262144 pairs

@@ -7,12 +7,15 @@
   E5 bench_attention  — §6.2 jump-over on causal attention
   E5b bench_mesh      — beyond-paper Hilbert ICI layout
 
-Prints ``bench,name,value,derived`` CSV.  Roofline terms come from
+Prints ``bench,name,value,derived`` CSV.  ``--json [PATH]`` additionally
+records the rows as JSON (default ``BENCH_curves.json``) so the perf
+trajectory is tracked across PRs.  Roofline terms come from
 ``python -m repro.launch.dryrun`` (they need the 512-device env), not
 from here.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -35,15 +38,35 @@ def main() -> None:
         ("attention", bench_attention),
         ("mesh", bench_mesh),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = sys.argv[1:]
+    json_path = None
+    if "--json" in args:
+        # --json [PATH.json]: only a *.json token is taken as the path, so
+        # a typo'd bench selector is never silently consumed as a filename
+        i = args.index("--json")
+        args.pop(i)
+        json_path = "BENCH_curves.json"
+        if i < len(args) and args[i].endswith(".json"):
+            json_path = args.pop(i)
+    selected = set(args)
+    unknown = selected - {name for name, _ in modules}
+    if unknown:
+        print(f"# unknown bench(es): {sorted(unknown)}; "
+              f"known: {[n for n, _ in modules]}", file=sys.stderr)
     print("bench,name,value,derived")
     t0 = time.time()
+    collected: list[dict] = []
     for name, mod in modules:
-        if only and only != name:
+        if selected and name not in selected:
             continue
         for row in mod.run():
+            collected.append(row)
             derived = str(row.get("derived", "")).replace(",", ";")
             print(f"{row['bench']},{row['name']},{row['value']},{derived}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"rows": collected}, f, indent=1)
+        print(f"# wrote {json_path} ({len(collected)} rows)", file=sys.stderr)
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 
 

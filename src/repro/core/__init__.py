@@ -8,9 +8,18 @@ Modules:
   fur           overlay-grid curves for arbitrary n×m       (paper §6.1)
   fgf           jump-over walker for general regions        (paper §6.2)
   nano          nano-programs (packed curve fragments)      (paper §6.3)
+  hilbert_nd    d-dimensional Hilbert/Z-order/Gray codecs   (beyond-paper)
+  curve         SpaceFillingCurve abstraction + registry    (beyond-paper)
   schedule      tile-schedule factory + traffic models      (TPU adaptation)
   jax_hilbert   device-side vectorised codec                (TPU adaptation)
 """
+from .curve import (
+    SpaceFillingCurve,
+    available_curves,
+    curve_supports,
+    get_curve,
+    register,
+)
 from .fgf import (
     EMPTY,
     FULL,
@@ -36,9 +45,22 @@ from .hilbert import (
     hilbert_encode_t,
     hilbert_path,
 )
+from .hilbert_nd import (
+    canonical_nbits,
+    gray_decode_nd,
+    gray_encode_nd,
+    gray_path_nd,
+    hilbert_decode_nd,
+    hilbert_encode_nd,
+    hilbert_path_nd,
+    zorder_decode_nd,
+    zorder_encode_nd,
+    zorder_path_nd,
+)
 from .jax_hilbert import (
     hilbert_decode_jax,
     hilbert_encode_jax,
+    hilbert_encode_nd_jax,
     hilbert_sort_key,
     schedule_to_device,
     zorder_encode_jax,
@@ -53,11 +75,16 @@ from .peano import peano_decode, peano_encode, peano_path
 from .schedule import (
     CURVES,
     matmul_traffic_bytes,
+    matmul_traffic_bytes_3d,
     miss_curve,
     operand_reloads,
+    operand_reloads_nd,
     pair_stream,
+    schedule_cache_clear,
     schedule_hilbert_values,
     tile_schedule,
+    tile_schedule_device,
+    tile_schedule_nd,
     triangle_schedule,
 )
 from .zorder import (

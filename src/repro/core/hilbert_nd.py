@@ -1,0 +1,237 @@
+"""d-dimensional space-filling-curve codecs (beyond-paper generalisation).
+
+The paper's machinery (Mealy automaton §3, generalised grids §6) is 2-D;
+Haverkort's work on three- and higher-dimensional Hilbert curves (see
+PAPERS.md) shows the natural extension.  This module implements the
+Butz/Lawder-style d-dimensional Hilbert codec in the compact
+"transpose" formulation (Skilling 2004): each bit level applies a
+Gray-code rotate-reflect transform to the coordinate tuple, so both
+directions run in O(nbits · d) vectorised numpy ops over arbitrarily
+large coordinate batches — the same SIMD reformulation the paper applies
+to its 2-D host loops (§7).
+
+Canonical (resolution-free) coding: the d-dimensional curve's orientation
+cycles with period d in the bit depth — the direct generalisation of the
+paper's U↔D toggle on leading (0,0) bit-pairs (§3, "L even" rule).
+``nbits`` is therefore rounded up to the next multiple of d, which makes
+the order value independent of the chosen resolution and, at d = 2,
+**bit-identical** to the paper's Mealy automaton (asserted in tests).
+
+Also here: d-dimensional Z-order and Gray-code baselines (generic
+bit-interleave; the 2-D shift-mask fast path lives in
+:mod:`repro.core.zorder`).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def canonical_nbits(nbits: int, ndim: int) -> int:
+    """Round ``nbits`` up to a multiple of ``ndim`` (resolution-free rule)."""
+    if nbits <= 0:
+        nbits = 1
+    return nbits + (-nbits) % ndim
+
+
+def _coord_bits(coords: np.ndarray) -> int:
+    """Minimal per-axis bit depth covering ``coords``."""
+    hi = int(coords.max(initial=0))
+    return max(hi, 1).bit_length()
+
+
+def _as_coords(coords) -> np.ndarray:
+    c = np.asarray(coords, dtype=np.int64)
+    if c.ndim < 1 or c.shape[-1] < 1:
+        raise ValueError(f"coords must have shape (..., ndim), got {c.shape}")
+    return c
+
+
+def hilbert_encode_nd(coords, nbits: int | None = None):
+    """h = H_d(coords) for coords[..., d]; canonical d-dim Hilbert values.
+
+    ``nbits`` is the per-axis bit depth; it is rounded up to a multiple of
+    d (resolution-free canonical coding — any sufficient value gives the
+    same order values).  Requires d * nbits <= 62 for int64 order values.
+    """
+    c = _as_coords(coords)
+    if np.any(c < 0):
+        raise ValueError("coordinates must be non-negative")
+    ndim = c.shape[-1]
+    if ndim == 1:  # the 1-D "curve" is the identity
+        h = c[..., 0]
+        return int(h) if h.ndim == 0 else h.copy()
+    if nbits is None:
+        nbits = _coord_bits(c)
+    nbits = canonical_nbits(nbits, ndim)
+    if nbits * ndim > 62:
+        raise ValueError(f"nbits*ndim = {nbits * ndim} > 62 overflows int64")
+    X = [c[..., k].copy() for k in range(ndim)]
+    M = 1 << (nbits - 1)
+    # inverse-undo: top-down rotate-reflect (Skilling's AxesToTranspose)
+    Q = M
+    while Q > 1:
+        P = Q - 1
+        for k in range(ndim):
+            hi = (X[k] & Q) != 0
+            t = (X[0] ^ X[k]) & P
+            X[0] = np.where(hi, X[0] ^ P, X[0] ^ t)
+            X[k] = np.where(hi, X[k], X[k] ^ t)
+        Q >>= 1
+    # Gray encode
+    for k in range(1, ndim):
+        X[k] = X[k] ^ X[k - 1]
+    t = np.zeros_like(X[0])
+    Q = M
+    while Q > 1:
+        t = np.where((X[ndim - 1] & Q) != 0, t ^ (Q - 1), t)
+        Q >>= 1
+    for k in range(ndim):
+        X[k] = X[k] ^ t
+    # interleave the transposed form into the order value (axis 0 = MSB)
+    h = np.zeros_like(X[0])
+    for b in range(nbits - 1, -1, -1):
+        for k in range(ndim):
+            h = (h << 1) | ((X[k] >> b) & 1)
+    if h.ndim == 0:
+        return int(h)
+    return h
+
+
+def hilbert_decode_nd(h, ndim: int, nbits: int | None = None) -> np.ndarray:
+    """coords[..., ndim] = H_d^-1(h); inverse of :func:`hilbert_encode_nd`."""
+    h = np.asarray(h, dtype=np.int64)
+    if np.any(h < 0):
+        raise ValueError("order values must be non-negative")
+    if ndim < 1:
+        raise ValueError(f"ndim must be >= 1, got {ndim}")
+    if ndim == 1:
+        return h[..., None].copy()
+    if nbits is None:
+        total = max(int(h.max(initial=0)), 1).bit_length()
+        nbits = -(-total // ndim)
+    nbits = canonical_nbits(nbits, ndim)
+    if nbits * ndim > 62:
+        raise ValueError(f"nbits*ndim = {nbits * ndim} > 62 overflows int64")
+    # de-interleave into the transposed form
+    X = [np.zeros_like(h) for _ in range(ndim)]
+    for b in range(nbits - 1, -1, -1):
+        for k in range(ndim):
+            pos = b * ndim + (ndim - 1 - k)
+            X[k] = (X[k] << 1) | ((h >> pos) & 1)
+    # Gray decode
+    N = 2 << (nbits - 1)
+    t = X[ndim - 1] >> 1
+    for k in range(ndim - 1, 0, -1):
+        X[k] = X[k] ^ X[k - 1]
+    X[0] = X[0] ^ t
+    # undo excess work: bottom-up rotate-reflect (TransposeToAxes)
+    Q = 2
+    while Q != N:
+        P = Q - 1
+        for k in range(ndim - 1, -1, -1):
+            hi = (X[k] & Q) != 0
+            t2 = (X[0] ^ X[k]) & P
+            X[0] = np.where(hi, X[0] ^ P, X[0] ^ t2)
+            X[k] = np.where(hi, X[k], X[k] ^ t2)
+        Q <<= 1
+    return np.stack(X, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# d-dimensional Z-order / Gray-code baselines (generic bit interleave)
+# ---------------------------------------------------------------------------
+
+def zorder_encode_nd(coords, nbits: int | None = None):
+    """z = Z_d(coords): bit interleave with axis 0 supplying the MSB of
+    each group (the d-dim generalisation of paper §2.2 quadrant numbering).
+    """
+    c = _as_coords(coords)
+    ndim = c.shape[-1]
+    if nbits is None:
+        nbits = _coord_bits(c)
+    if nbits * ndim > 62:
+        raise ValueError(f"nbits*ndim = {nbits * ndim} > 62 overflows int64")
+    z = np.zeros(c.shape[:-1], dtype=np.int64)
+    for b in range(nbits - 1, -1, -1):
+        for k in range(ndim):
+            z = (z << 1) | ((c[..., k] >> b) & 1)
+    if z.ndim == 0:
+        return int(z)
+    return z
+
+
+def zorder_decode_nd(z, ndim: int, nbits: int | None = None) -> np.ndarray:
+    z = np.asarray(z, dtype=np.int64)
+    if nbits is None:
+        total = max(int(z.max(initial=0)), 1).bit_length()
+        nbits = -(-total // ndim)
+    X = [np.zeros_like(z) for _ in range(ndim)]
+    for b in range(nbits - 1, -1, -1):
+        for k in range(ndim):
+            pos = b * ndim + (ndim - 1 - k)
+            X[k] = (X[k] << 1) | ((z >> pos) & 1)
+    return np.stack(X, axis=-1)
+
+
+def _gray_inverse(z: np.ndarray) -> np.ndarray:
+    g = z.astype(np.uint64)
+    for s in (1, 2, 4, 8, 16, 32):
+        g = g ^ (g >> np.uint64(s))
+    return g.astype(np.int64)
+
+
+def gray_encode_nd(coords, nbits: int | None = None):
+    """Gray-code order: the value whose Gray code is Z_d(coords)."""
+    z = np.asarray(zorder_encode_nd(coords, nbits), dtype=np.int64)
+    g = _gray_inverse(z)
+    if g.ndim == 0:
+        return int(g)
+    return g
+
+
+def gray_decode_nd(g, ndim: int, nbits: int | None = None) -> np.ndarray:
+    g = np.asarray(g, dtype=np.int64).astype(np.uint64)
+    z = (g ^ (g >> np.uint64(1))).astype(np.int64)
+    return zorder_decode_nd(z, ndim, nbits)
+
+
+# ---------------------------------------------------------------------------
+# Paths over d-dimensional grids
+# ---------------------------------------------------------------------------
+
+def cover_bits(shape: tuple[int, ...]) -> int:
+    """Per-axis bit depth of the smallest power-of-two hypercube covering
+    ``shape`` (the d-dim analogue of :func:`repro.core.fgf.cover_order`)."""
+    return max(int(s - 1) for s in shape).bit_length() if max(shape) > 1 else 1
+
+
+def clip_path_nd(decode, shape: tuple[int, ...]) -> np.ndarray:
+    """Clip a codec's power-of-two cover to ``shape`` (paper §6 baseline)."""
+    ndim = len(shape)
+    if any(s <= 0 for s in shape):
+        return np.zeros((0, ndim), dtype=np.int64)
+    nbits = cover_bits(shape)
+    side = 1 << nbits
+    c = decode(np.arange(side**ndim, dtype=np.int64), ndim, nbits=nbits)
+    keep = np.ones(len(c), dtype=bool)
+    for k, s in enumerate(shape):
+        keep &= c[:, k] < s
+    return c[keep]
+
+
+def hilbert_path_nd(shape: tuple[int, ...]) -> np.ndarray:
+    """All grid coordinates of ``shape`` in d-dim Hilbert order.
+
+    Power-of-two hypercubes decode directly; other shapes clip the
+    covering hypercube (the paper's §6 baseline strategy, generalised).
+    Returns int64[(prod(shape), ndim)].
+    """
+    return clip_path_nd(hilbert_decode_nd, shape)
+
+
+def zorder_path_nd(shape: tuple[int, ...]) -> np.ndarray:
+    return clip_path_nd(zorder_decode_nd, shape)
+
+
+def gray_path_nd(shape: tuple[int, ...]) -> np.ndarray:
+    return clip_path_nd(gray_decode_nd, shape)

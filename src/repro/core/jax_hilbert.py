@@ -75,10 +75,71 @@ def hilbert_decode_jax(h: jax.Array, nbits: int) -> tuple[jax.Array, jax.Array]:
     return i, j
 
 
+@partial(jax.jit, static_argnames=("nbits",))
+def hilbert_encode_nd_jax(coords: jax.Array, nbits: int) -> jax.Array:
+    """h = H_d(coords) for int32 coords[..., d] — the device twin of
+    :func:`repro.core.hilbert_nd.hilbert_encode_nd` (bit-identical,
+    asserted in tests).
+
+    The Butz/Lawder rotate-reflect transform runs as a ``lax.fori_loop``
+    over the (static) bit levels with the axis loop unrolled — the whole
+    coordinate batch is processed in parallel per level on the VPU.
+    ``nbits`` is rounded up to a multiple of d (canonical resolution-free
+    coding); requires d * nbits <= 31 for int32 order values.
+    """
+    ndim = coords.shape[-1]
+    nbits = nbits + (-nbits) % ndim
+    if nbits * ndim > 31:
+        raise ValueError(f"nbits*ndim = {nbits * ndim} > 31 overflows int32")
+    X0 = [coords[..., k].astype(jnp.int32) for k in range(ndim)]
+
+    def undo_level(t, X):
+        # Q = M >> t, top-down rotate-reflect
+        Q = jnp.int32(1) << (nbits - 1 - t)
+        P = Q - 1
+        X = list(X)
+        for k in range(ndim):
+            hi = (X[k] & Q) != 0
+            if k == 0:  # swap term is identically 0 for the pivot axis
+                X[0] = jnp.where(hi, X[0] ^ P, X[0])
+            else:
+                swap = (X[0] ^ X[k]) & P
+                X[0], X[k] = (
+                    jnp.where(hi, X[0] ^ P, X[0] ^ swap),
+                    jnp.where(hi, X[k], X[k] ^ swap),
+                )
+        return tuple(X)
+
+    X = list(jax.lax.fori_loop(0, nbits - 1, undo_level, tuple(X0)))
+    for k in range(1, ndim):
+        X[k] = X[k] ^ X[k - 1]
+
+    def gray_level(t, tacc):
+        Q = jnp.int32(1) << (nbits - 1 - t)
+        return jnp.where((X[ndim - 1] & Q) != 0, tacc ^ (Q - 1), tacc)
+
+    t = jax.lax.fori_loop(
+        0, nbits - 1, gray_level, jnp.zeros_like(X[0])
+    )
+    X = [x ^ t for x in X]
+
+    def interleave(b, h):
+        level = nbits - 1 - b
+        for k in range(ndim):
+            h = (h << 1) | ((X[k] >> level) & 1)
+        return h
+
+    return jax.lax.fori_loop(0, nbits, interleave, jnp.zeros_like(X[0]))
+
+
 def hilbert_sort_key(coords: jax.Array, nbits: int) -> jax.Array:
-    """Hilbert keys for int coordinate pairs coords[..., 2] (edge sorting,
-    locality-preserving token batching — paper §6.2 application note)."""
-    return hilbert_encode_jax(coords[..., 0], coords[..., 1], nbits)
+    """Hilbert keys for int coordinate tuples coords[..., d] (edge sorting,
+    locality-preserving point/token batching — paper §6.2 application
+    note, d-dimensional).  d = 2 routes through the Mealy-automaton codec
+    (bit-identical to the nd codec; both canonicalise nbits)."""
+    if coords.shape[-1] == 2:
+        return hilbert_encode_jax(coords[..., 0], coords[..., 1], nbits)
+    return hilbert_encode_nd_jax(coords, nbits)
 
 
 def zorder_encode_jax(i: jax.Array, j: jax.Array) -> jax.Array:

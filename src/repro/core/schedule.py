@@ -1,7 +1,7 @@
 """Tile-schedule factory and HBM-traffic models.
 
 This is the bridge between the paper's curves and the TPU kernels: a
-*schedule* is an int32[steps, 2] table of (i, j) tile coordinates that a
+*schedule* is an int32[steps, ndim] table of tile coordinates that a
 Pallas kernel's ``index_map`` reads (via scalar prefetch) to decide which
 operand tiles to map into VMEM at each grid step.  Pallas only re-copies
 an operand block when its index changes between consecutive grid steps —
@@ -11,55 +11,51 @@ changes per step) halves guaranteed re-fetches vs. worst-case orders and,
 unlike row-major, keeps working sets square at *every* scale
 (cache-oblivious, paper §1).
 
+Curve dispatch goes through the :mod:`repro.core.curve` registry: 2-D
+schedules (``tile_schedule``) are bit-identical to the historical
+string-dispatch tables, and ``tile_schedule_nd`` opens arbitrary
+dimension — e.g. 3-D (i, j, k) matmul grids.  Schedules are pure
+functions of (curve, shape), so both the host tables and their
+device-resident uploads are LRU-cached.
+
 Also here: the traffic/cache models used by benchmarks to reproduce the
 paper's Fig. 1(e) (cache misses vs. cache size) for tile streams.
 """
 from __future__ import annotations
 
+import functools
 from collections import OrderedDict
-from typing import Callable, Iterable
+from typing import Iterable
 
 import numpy as np
 
 from . import fgf
-from .fur import fur_path
-from .hilbert import hilbert_decode
-from .lindenmayer import hilbert_path_vectorised
-from .peano import peano_decode
-from .zorder import gray_decode, zorder_decode
+from .curve import get_curve
 
 CURVES = ("row", "col", "zigzag", "zorder", "gray", "hilbert", "fur", "peano")
 
 
-def _row(n: int, m: int) -> np.ndarray:
-    i, j = np.divmod(np.arange(n * m, dtype=np.int64), m)
-    return np.stack([i, j], axis=1)
+@functools.lru_cache(maxsize=256)
+def _cached_path(curve: str, shape: tuple[int, ...]) -> np.ndarray:
+    out = np.ascontiguousarray(get_curve(curve).path(shape).astype(np.int32))
+    expected = int(np.prod(shape)) if all(s > 0 for s in shape) else 0
+    assert out.shape == (expected, len(shape)), (curve, shape, out.shape)
+    out.setflags(write=False)  # cached: hand out read-only views
+    return out
 
 
-def _col(n: int, m: int) -> np.ndarray:
-    j, i = np.divmod(np.arange(n * m, dtype=np.int64), n)
-    return np.stack([i, j], axis=1)
+def tile_schedule_nd(curve: str, shape: tuple[int, ...]) -> np.ndarray:
+    """Visit order for a d-dimensional tile grid.  int32[(prod(shape), d)].
 
-
-def _zigzag(n: int, m: int) -> np.ndarray:
-    """Boustrophedon raster: row-major with every odd row reversed."""
-    p = _row(n, m)
-    p = p.reshape(n, m, 2)
-    p[1::2] = p[1::2, ::-1]
-    return p.reshape(n * m, 2)
-
-
-def _clip(decode: Callable, n: int, m: int) -> np.ndarray:
-    """Paper §6 baseline: iterate the 2^L (or 3^L) cover, ignore outside."""
-    if decode is peano_decode:
-        side = 1
-        while side < max(n, m):
-            side *= 3
-    else:
-        side = 1 << fgf.cover_order(n, m)
-    i, j = decode(np.arange(side * side, dtype=np.int64))
-    keep = (i < n) & (j < m)
-    return np.stack([i[keep], j[keep]], axis=1)
+    Dispatches through the curve registry; raises ``ValueError`` when the
+    curve does not support ``len(shape)`` dimensions (e.g. ``fur`` and
+    ``peano`` are 2-D constructions).  Results are LRU-cached and returned
+    as read-only arrays — copy before mutating.
+    """
+    shape = tuple(int(s) for s in shape)
+    if any(s <= 0 for s in shape):
+        return np.zeros((0, len(shape)), dtype=np.int32)
+    return _cached_path(curve, shape)
 
 
 def tile_schedule(curve: str, n: int, m: int) -> np.ndarray:
@@ -67,33 +63,87 @@ def tile_schedule(curve: str, n: int, m: int) -> np.ndarray:
 
     ``hilbert`` uses the FGF jump-over walker to clip the power-of-two
     cover (no enumeration overhead); ``fur`` is the overlay-grid
-    generalised curve (native n×m, unit steps).
+    generalised curve (native n×m, unit steps).  Writable copy of the
+    cached table (2-D legacy interface; see :func:`tile_schedule_nd`).
     """
-    if n <= 0 or m <= 0:
-        return np.zeros((0, 2), dtype=np.int32)
-    if curve == "row":
-        out = _row(n, m)
-    elif curve == "col":
-        out = _col(n, m)
-    elif curve == "zigzag":
-        out = _zigzag(n, m)
-    elif curve == "zorder":
-        out = _clip(zorder_decode, n, m)
-    elif curve == "gray":
-        out = _clip(gray_decode, n, m)
-    elif curve == "hilbert":
-        if n == m and (n & (n - 1)) == 0:
-            out = hilbert_path_vectorised(fgf.cover_order(n))  # fast path
-        else:
-            out = fgf.fgf_rect(fgf.cover_order(n, m), n, m)[:, 1:]
-    elif curve == "fur":
-        out = fur_path(n, m)
-    elif curve == "peano":
-        out = _clip(peano_decode, n, m)
-    else:
-        raise ValueError(f"unknown curve {curve!r}; one of {CURVES}")
-    assert out.shape == (n * m, 2), (curve, n, m, out.shape)
-    return np.ascontiguousarray(out.astype(np.int32))
+    return tile_schedule_nd(curve, (n, m)).copy()
+
+
+def mark_first_visits(sched: np.ndarray, axes: tuple[int, ...]) -> np.ndarray:
+    """Append a column flagging the first visit of each ``axes`` projection.
+
+    E.g. for a 3-D (i, j, k) matmul schedule, ``axes=(0, 1)`` marks the
+    step at which each output tile (i, j) is seen for the first time — the
+    accumulate-kernel's "initialise instead of add" signal (the 3-D
+    analogue of the first/last flags in the attention schedules).
+    """
+    s = np.asarray(sched, dtype=np.int64)
+    proj = s[:, list(axes)]
+    _, first_idx = np.unique(proj, axis=0, return_index=True)
+    flag = np.zeros(len(s), dtype=np.int64)
+    flag[first_idx] = 1
+    return np.ascontiguousarray(
+        np.concatenate([s, flag[:, None]], axis=1).astype(np.int32)
+    )
+
+
+def min_revisit_gap(sched: np.ndarray, axes: tuple[int, ...]) -> int:
+    """Smallest step distance between non-consecutive revisits of the same
+    ``axes`` projection (0 when nothing is ever revisited non-consecutively).
+
+    Hazard audit for read-modify-write kernels: a double-buffered Pallas
+    pipeline needs gap >= 3 between a block's flush and its re-fetch.
+    Unit-step schedules (power-of-two hypercubes) guarantee >= 3; clipped
+    covers of other shapes can produce gap-2 revisits, so audit before
+    trusting a schedule on hardware (see matmul_swizzled_3d docstring).
+    """
+    s = np.asarray(sched, dtype=np.int64)
+    last: dict[tuple, int] = {}
+    best = 0
+    for step, key in enumerate(map(tuple, s[:, list(axes)])):
+        if key in last:
+            gap = step - last[key]
+            if gap > 1 and (best == 0 or gap < best):
+                best = gap
+        last[key] = step
+    return best
+
+
+def tile_schedule_device(
+    curve: str,
+    shape: tuple[int, ...],
+    *,
+    first_visit_axes: tuple[int, ...] | None = None,
+):
+    """Device-resident int32 schedule table (scalar-prefetch operand).
+
+    The upload is LRU-cached alongside the host table, so repeated kernel
+    wrapper calls with the same (curve, grid shape) reuse the same device
+    buffer instead of regenerating + re-uploading the schedule.  With
+    ``first_visit_axes`` the table carries an extra
+    :func:`mark_first_visits` flag column.
+    """
+    return _device_schedule(
+        curve, tuple(int(s) for s in shape), first_visit_axes
+    )
+
+
+@functools.lru_cache(maxsize=256)
+def _device_schedule(
+    curve: str, shape: tuple[int, ...], first_visit_axes: tuple[int, ...] | None
+):
+    import jax.numpy as jnp
+
+    sched = tile_schedule_nd(curve, shape)
+    if first_visit_axes is not None:
+        sched = mark_first_visits(sched, first_visit_axes)
+    return jnp.asarray(sched, dtype=jnp.int32)
+
+
+def schedule_cache_clear() -> None:
+    """Drop all cached schedules (host + device)."""
+    _cached_path.cache_clear()
+    _device_schedule.cache_clear()
 
 
 def triangle_schedule(curve: str, n: int, *, strict: bool = True) -> np.ndarray:
@@ -112,11 +162,13 @@ def triangle_schedule(curve: str, n: int, *, strict: bool = True) -> np.ndarray:
 
 
 def schedule_hilbert_values(sched: np.ndarray) -> np.ndarray:
-    """Canonical Hilbert value per schedule row (work-stealing keys)."""
-    from .hilbert import hilbert_encode
+    """Canonical Hilbert value per schedule row (work-stealing keys).
 
+    Works for any ndim: rows are int coordinates, keys are the canonical
+    d-dimensional Hilbert order values.
+    """
     s = np.asarray(sched, dtype=np.int64)
-    return hilbert_encode(s[:, 0], s[:, 1])
+    return np.asarray(get_curve("hilbert").encode(s))
 
 
 # ---------------------------------------------------------------------------
@@ -129,10 +181,19 @@ def operand_reloads(sched: np.ndarray, axis: int) -> int:
     This is exactly the number of HBM→VMEM copies Pallas issues for an
     operand whose ``index_map`` depends only on ``sched[step, axis]``.
     """
+    return operand_reloads_nd(sched, (axis,))
+
+
+def operand_reloads_nd(sched: np.ndarray, axes: tuple[int, ...]) -> int:
+    """Reload count for an operand whose block index is the projection of
+    the schedule onto ``axes`` — e.g. the A panel of a 3-D (i, j, k)
+    matmul schedule projects onto (0, 2) = (i, k)."""
     s = np.asarray(sched)
     if len(s) == 0:
         return 0
-    return int(1 + np.count_nonzero(np.diff(s[:, axis])))
+    proj = s[:, list(axes)]
+    changed = np.any(proj[1:] != proj[:-1], axis=1)
+    return int(1 + np.count_nonzero(changed))
 
 
 def matmul_traffic_bytes(
@@ -169,6 +230,42 @@ def matmul_traffic_bytes(
     return {
         "a_loads": a_loads,
         "b_loads": b_loads,
+        "a_bytes": float(a_bytes),
+        "b_bytes": float(b_bytes),
+        "out_bytes": float(o_bytes),
+        "total_bytes": float(a_bytes + b_bytes + o_bytes),
+    }
+
+
+def matmul_traffic_bytes_3d(
+    sched: np.ndarray,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    bytes_in: int = 2,
+    bytes_out: int = 4,
+) -> dict[str, float]:
+    """Modeled HBM traffic of the 3-D-scheduled matmul kernel.
+
+    One grid step per (i, j, k) tile: the A tile is keyed by (i, k), B by
+    (k, j), and the f32 accumulator tile by (i, j) — each re-read/written
+    only when its projection changes (the Pallas revisit rule).  A 3-D
+    Hilbert schedule changes exactly one of (i, j, k) per step, so one of
+    the three tiles is guaranteed resident at every step, at any VMEM
+    size (and revisits cluster, so larger tile caches keep winning —
+    the Fig. 1(e) story lifted to 3-D; see bench_locality.run_3d).
+    """
+    a_loads = operand_reloads_nd(sched, (0, 2))
+    b_loads = operand_reloads_nd(sched, (2, 1))
+    o_moves = operand_reloads_nd(sched, (0, 1))
+    a_bytes = a_loads * bm * bk * bytes_in
+    b_bytes = b_loads * bn * bk * bytes_in
+    o_bytes = o_moves * bm * bn * bytes_out * 2  # read + write back
+    return {
+        "a_loads": a_loads,
+        "b_loads": b_loads,
+        "o_moves": o_moves,
         "a_bytes": float(a_bytes),
         "b_bytes": float(b_bytes),
         "out_bytes": float(o_bytes),

@@ -11,6 +11,13 @@ Sharding: the global batch is split over ("pod", "data"); each dp shard
 generates only its rows (host-local generation — no cross-host traffic),
 keyed by the shard index, matching how a real multi-pod input pipeline
 feeds per-host slices of the global batch.
+
+Hilbert-ordered batching: ``hilbert_order=True`` reorders the rows of
+every batch by the d-dimensional Hilbert key of a per-row token sketch
+(:func:`hilbert_token_order`), so rows with similar token statistics are
+adjacent — locality-preserving token batching (paper §6.2 application
+note, via :mod:`repro.core.hilbert_nd`).  The reorder is a pure function
+of the batch, so exact-resume semantics are untouched.
 """
 from __future__ import annotations
 
@@ -19,6 +26,33 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import hilbert_encode_nd
+
+
+def hilbert_token_order(
+    tokens: np.ndarray, *, ndim: int = 3, nbits: int = 6
+) -> np.ndarray:
+    """Permutation ordering batch rows by a d-dim Hilbert key.
+
+    Each row's sketch is the mean token id over ``ndim`` equal sequence
+    chunks, min-max quantised to ``nbits`` bits per axis; rows are sorted
+    by the canonical d-dimensional Hilbert order value of the sketch.
+    Deterministic (stable sort of a pure function of ``tokens``).
+
+    Host-side twin of :func:`repro.kernels.kmeans.hilbert_point_order`
+    (same quantise→key→argsort recipe; numpy here because the pipeline
+    is host-local and must stay jax-free for exact resume).
+    """
+    B, S = tokens.shape
+    ndim = max(1, min(ndim, S))
+    chunks = np.array_split(tokens.astype(np.float64), ndim, axis=1)
+    feat = np.stack([c.mean(axis=1) for c in chunks], axis=1)  # (B, ndim)
+    lo = feat.min(axis=0)
+    span = np.maximum(feat.max(axis=0) - lo, 1e-9)
+    q = ((feat - lo) / span * ((1 << nbits) - 1)).astype(np.int64)
+    key = np.asarray(hilbert_encode_nd(q, nbits))
+    return np.argsort(key, kind="stable")
 
 
 def _batch_rng(seed: int, step: int, shard: int) -> np.random.Generator:
@@ -66,6 +100,7 @@ class SyntheticPipeline:
     shard: int = 0
     embed_dim: int | None = None
     embeds_only: bool = False
+    hilbert_order: bool = False
 
     @property
     def shard_batch(self) -> int:
@@ -82,6 +117,9 @@ class SyntheticPipeline:
             shard=self.shard,
             embed_dim=self.embed_dim,
         )
+        if self.hilbert_order:
+            perm = hilbert_token_order(out["tokens"])
+            out = {k: v[perm] for k, v in out.items()}
         if self.embeds_only:
             out.pop("tokens")
         return out

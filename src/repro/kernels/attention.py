@@ -28,6 +28,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 DEFAULT_MASK_VALUE = -0.7 * float(np.finfo(np.float32).max)
 
 
@@ -158,7 +160,7 @@ def flash_attention_swizzled(
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -30,6 +30,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 from repro.core import tile_schedule
 
 _CHUNK = 8
@@ -90,7 +92,7 @@ def floyd_warshall_blocked(
     d = d.astype(jnp.float32)
 
     full = tile_schedule(curve, nt, nt).astype(np.int32)
-    params = pltpu.CompilerParams(dimension_semantics=("arbitrary",))
+    params = CompilerParams(dimension_semantics=("arbitrary",))
 
     for kb in range(nt):
         spec_kk = pl.BlockSpec((b, b), lambda *_: (kb, kb))  # noqa: B023

@@ -23,6 +23,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import hilbert_sort_key
+from .pallas_compat import CompilerParams
+
+
+def hilbert_point_order(
+    x: jax.Array, *, nbits: int = 8, dims: int | None = None
+) -> jax.Array:
+    """Permutation sorting points by their d-dimensional Hilbert key.
+
+    The first ``dims`` features (default min(D, 3)) are min-max quantised
+    to a 2^nbits grid and coded with the canonical d-dim Hilbert codec
+    (:func:`repro.core.hilbert_sort_key`), so consecutive points — and
+    therefore the point *tiles* the kernels stream — cover compact regions
+    of feature space.  Used by the k-means and ε-join wrappers in ops.py.
+    """
+    N, D = x.shape
+    d = min(D, 3) if dims is None else min(dims, D)
+    # largest per-axis bit depth whose canonical (multiple-of-d) rounding
+    # keeps d*nbits <= 31 (int32 order values on device)
+    cap = max((31 // d) // d * d, 1)
+    nbits = min(nbits, cap)
+    xf = x[:, :d].astype(jnp.float32)
+    lo = jnp.min(xf, axis=0)
+    hi = jnp.max(xf, axis=0)
+    scale = ((1 << nbits) - 1) / jnp.maximum(hi - lo, 1e-9)
+    q = jnp.clip((xf - lo) * scale, 0, (1 << nbits) - 1).astype(jnp.int32)
+    return jnp.argsort(hilbert_sort_key(q, nbits))
+
 
 def _assign_kernel(sched_ref, x_ref, c_ref, cn_ref, min_out, arg_out, *, bc: int):
     s = pl.program_id(0)
@@ -79,7 +107,7 @@ def kmeans_assign_swizzled(
             jax.ShapeDtypeStruct((pt, ctn, bp), jnp.float32),
             jax.ShapeDtypeStruct((pt, ctn, bp), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

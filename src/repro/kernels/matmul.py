@@ -25,6 +25,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 
 def _matmul_kernel(sched_ref, a_ref, b_ref, o_ref, acc_ref, *, k_tiles: int):
     k = pl.program_id(1)
@@ -85,11 +87,112 @@ def matmul_swizzled(
         functools.partial(_matmul_kernel, k_tiles=kt),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,
     )(schedule, a, b)
+
+
+def _matmul3d_kernel(sched_ref, a_ref, b_ref, o_ref):
+    s = pl.program_id(0)
+
+    @pl.when(sched_ref[s, 3] == 1)
+    def _init():  # first visit of this (i, j) output tile
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret")
+)
+def matmul_swizzled_3d(
+    schedule: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = A @ B over a 3-D (i, j, k) tile order given by ``schedule``.
+
+    schedule: int32[(M/bm)*(N/bn)*(K/bk), 4] — any bijective order of the
+    3-D tile grid plus a first-visit flag column for the (i, j) output
+    projection (``mark_first_visits(tile_schedule_nd(curve, (mt, nt,
+    kt)), (0, 1))``; ops.py builds and caches this).  Unlike
+    :func:`matmul_swizzled` (2-D schedule, k innermost, VMEM accumulator
+    across the K reduction), every grid step here is one (i, j, k) tile
+    product accumulated straight into the f32 output block — the official
+    Pallas accumulation idiom, except "first visit" comes from the
+    schedule table because under a 3-D curve the k digits of one output
+    tile are not contiguous in the grid.
+
+    Revisit-safety: while the (i, j) index is unchanged the output block
+    stays VMEM-resident and ``+=`` accumulates in place; when it changes,
+    the block is flushed, and interpret mode re-fetches it on revisit
+    (asserted against the jnp.dot oracle in tests).  On real TPU the
+    Mosaic pipeline is NOT documented to re-fetch revisited *output*
+    windows — before production use the hardware path must be validated,
+    and if the re-fetch does not hold, the hardware-correct twin is the
+    ``input_output_aliases`` + aliased-input read of
+    :func:`tile_update_swizzled` (whose HBM writes genuine input
+    re-fetches do observe; that variant is in turn unverifiable in
+    interpret mode, which never feeds outputs back to aliased inputs —
+    see DESIGN.md §Changed-assumptions).  For *unit-step* schedules
+    (power-of-two tile cubes) an (i, j) projection is never revisited
+    with a gap under 3 grid steps (two consecutive moves returning to
+    the same (i, j) with the same k would repeat a grid point,
+    contradicting bijectivity), so a revisit's fetch never races the
+    preceding flush.  Clipped covers of non-power-of-two grids are NOT
+    unit-step and can produce gap-2 revisits — audit with
+    :func:`repro.core.schedule.min_revisit_gap(sched, (0, 1))` before
+    trusting such a schedule on hardware (interpret mode is exact
+    regardless).
+
+    The payoff (paper §1, generalised): a unit-step 3-D schedule
+    changes one of (i, j, k) per step, so of the tiles A(i,k) / B(k,j) /
+    C(i,j) exactly one is guaranteed resident at every step at *any*
+    VMEM size, and — unlike row-major, whose k-innermost sweep never
+    revisits within reach — the Hilbert order keeps revisits clustered,
+    so any tile cache beyond one block (multi-buffered VMEM, HBM
+    locality) hits where row-major misses (2-3x fewer tile moves at
+    realistic cache sizes; bench_locality run_3d).  The 2-D path stays
+    the default in ops.py (its output tiles are written exactly once
+    and it needs no f32 HBM round-trips).
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    mt, nt, kt = M // bm, N // bn, K // bk
+    assert schedule.shape == (mt * nt * kt, 4), (schedule.shape, mt, nt, kt)
+    out_dtype = out_dtype or a.dtype
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mt * nt * kt,),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda s, sr: (sr[s, 0], sr[s, 2])),
+            pl.BlockSpec((bk, bn), lambda s, sr: (sr[s, 2], sr[s, 1])),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda s, sr: (sr[s, 0], sr[s, 1])),
+    )
+    out = pl.pallas_call(
+        _matmul3d_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(schedule, a, b)
+    return out.astype(out_dtype)
 
 
 def _accum_update_kernel(sched_ref, o_in_ref, a_ref, b_ref, o_ref, *, alpha: float):
@@ -146,7 +249,7 @@ def tile_update_swizzled(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), o.dtype),
         input_output_aliases={1: 0},  # o (arg after schedule) -> output 0
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -13,13 +13,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import tile_schedule, triangle_schedule
+from repro.core import get_curve, tile_schedule_device, triangle_schedule
 from . import ref
 from .attention import causal_schedule, flash_attention_swizzled, full_schedule
 from .cholesky import cholesky_blocked
 from .floyd_warshall import floyd_warshall_blocked
-from .kmeans import kmeans_assign_swizzled
-from .matmul import matmul_swizzled
+from .kmeans import hilbert_point_order, kmeans_assign_swizzled
+from .matmul import matmul_swizzled, matmul_swizzled_3d
 from .simjoin import simjoin_counts_swizzled
 
 DEFAULT_CURVE = "fur"  # overlay-grid Hilbert: native n×m, unit steps
@@ -52,21 +52,46 @@ def matmul(
     bn: int = 256,
     bk: int = 256,
     out_dtype=None,
+    schedule_ndim: int = 2,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """C = A @ B with a curve-scheduled Pallas kernel (paper §1/§7)."""
+    """C = A @ B with a curve-scheduled Pallas kernel (paper §1/§7).
+
+    ``schedule_ndim=2`` (default fast path): the curve orders the (i, j)
+    output tiles and k runs innermost with a VMEM-resident accumulator —
+    each output tile is written exactly once.  ``schedule_ndim=3``: the
+    curve orders the full (i, j, k) tile grid, so curve locality extends
+    across the K axis too (one of A/B/C guaranteed resident per step,
+    clustered revisits at every cache size); accumulation is a
+    read-modify-write into an f32 buffer (see
+    :func:`repro.kernels.matmul.matmul_swizzled_3d`).  Curves
+    without 3-D support (``fur``, ``peano``) fall back to ``hilbert``.
+    """
     M, K = a.shape
     K2, N = b.shape
     assert K == K2
+    assert schedule_ndim in (2, 3), schedule_ndim
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
     ap = _pad2(a, bm, bk)
     bp = _pad2(b, bk, bn)
     mt, nt = ap.shape[0] // bm, bp.shape[1] // bn
-    sched = jnp.asarray(tile_schedule(curve, mt, nt), dtype=jnp.int32)
-    out = matmul_swizzled(
-        sched, ap, bp, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
-        interpret=_interpret(interpret),
-    )
+    if schedule_ndim == 3:
+        if not get_curve(curve).supports(3):  # raises on unknown names
+            curve = "hilbert"
+        kt = ap.shape[1] // bk
+        sched = tile_schedule_device(
+            curve, (mt, nt, kt), first_visit_axes=(0, 1)
+        )
+        out = matmul_swizzled_3d(
+            sched, ap, bp, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+            interpret=_interpret(interpret),
+        )
+    else:
+        sched = tile_schedule_device(curve, (mt, nt))
+        out = matmul_swizzled(
+            sched, ap, bp, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+            interpret=_interpret(interpret),
+        )
     return out[:M, :N]
 
 
@@ -124,18 +149,33 @@ def kmeans_assign(
     curve: str = DEFAULT_CURVE,
     bp: int = 256,
     bc: int = 128,
+    hilbert_order: bool = False,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """(squared distance to nearest centroid, assignment) per point."""
+    """(squared distance to nearest centroid, assignment) per point.
+
+    ``hilbert_order=True`` pre-sorts the points by the d-dimensional
+    Hilbert key of their (quantised) features before tiling, so each
+    point tile covers a compact region of feature space (paper §6.2
+    application note, generalised to d dims); results are returned in the
+    original point order.
+    """
     N, D = x.shape
     K, _ = c.shape
+    if hilbert_order:
+        perm = hilbert_point_order(x)
+        inv = jnp.argsort(perm)
+        d2, assign = kmeans_assign(
+            x[perm], c, curve=curve, bp=bp, bc=bc, interpret=interpret
+        )
+        return d2[inv], assign[inv]
     bp, bc = min(bp, N), min(bc, K)
     xp = _pad2(x, bp, 1)
     # pad centroids with +inf-like rows that can never win
     pc = (-K) % bc
     cp = jnp.pad(c, ((0, pc), (0, 0)), constant_values=1e30) if pc else c
     pt, ct = xp.shape[0] // bp, cp.shape[0] // bc
-    sched = jnp.asarray(tile_schedule(curve, pt, ct), dtype=jnp.int32)
+    sched = tile_schedule_device(curve, (pt, ct))
     min_m, assign = kmeans_assign_swizzled(
         sched, xp, cp, bp=bp, bc=bc, interpret=_interpret(interpret)
     )
@@ -150,6 +190,7 @@ def kmeans_lloyd(
     iters: int = 10,
     curve: str = DEFAULT_CURVE,
     seed: int = 0,
+    hilbert_order: bool = False,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Full Lloyd iterations: swizzled assignment + segment-sum update."""
@@ -158,7 +199,9 @@ def kmeans_lloyd(
     c = x[jax.random.choice(key, N, shape=(k,), replace=False)]
     assign = jnp.zeros((N,), dtype=jnp.int32)
     for _ in range(iters):
-        _, assign = kmeans_assign(x, c, curve=curve, interpret=interpret)
+        _, assign = kmeans_assign(
+            x, c, curve=curve, hilbert_order=hilbert_order, interpret=interpret
+        )
         sums = jax.ops.segment_sum(x.astype(jnp.float32), assign, num_segments=k)
         cnt = jax.ops.segment_sum(jnp.ones((N,), jnp.float32), assign, num_segments=k)
         c = jnp.where(cnt[:, None] > 0, sums / jnp.maximum(cnt, 1.0)[:, None], c)
@@ -171,10 +214,22 @@ def simjoin_counts(
     *,
     curve: str = "hilbert",
     bp: int = 256,
+    hilbert_order: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """ε-join neighbour counts with FGF-Hilbert triangle scheduling."""
+    """ε-join neighbour counts with FGF-Hilbert triangle scheduling.
+
+    ``hilbert_order=True`` sorts the points by their d-dimensional
+    Hilbert key first, concentrating the join's hits near the tile-grid
+    diagonal (counts come back in the original point order).
+    """
     N, D = x.shape
+    if hilbert_order:
+        perm = hilbert_point_order(x)
+        inv = jnp.argsort(perm)
+        return simjoin_counts(
+            x[perm], eps, curve=curve, bp=bp, interpret=interpret
+        )[inv]
     bp = min(bp, N)
     # pad with far-away points that never join
     pn = (-N) % bp

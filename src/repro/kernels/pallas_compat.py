@@ -1,0 +1,16 @@
+"""Version-compat shims for the Pallas TPU API.
+
+The kernels target the current Pallas API (``pltpu.CompilerParams``); on
+older jaxlibs the same object is exported as ``pltpu.TPUCompilerParams``.
+Import ``CompilerParams`` from here so every kernel works across the
+versions the container may carry.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+__all__ = ["CompilerParams"]

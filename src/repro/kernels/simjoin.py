@@ -7,6 +7,12 @@ Hilbert order, keeping the true Hilbert order value of every tile for
 work-range accounting, and skipping the empty half at O(log) cost instead
 of masking it.
 
+Point ordering: the join benefits doubly from Hilbert machinery — the
+FGF walker orders the *tiles*, and :func:`repro.kernels.kmeans.
+hilbert_point_order` (d-dimensional ``hilbert_sort_key``) can pre-sort
+the *points* so ε-neighbours concentrate near the tile-grid diagonal
+(``hilbert_order=True`` in ops.py).
+
 Outputs are per-point neighbour counts.  The kernel writes *per-step*
 partial row/column sums (each output block written exactly once → safe
 under any schedule, no aliased-accumulator hazard); ops.py scatter-adds
@@ -22,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .pallas_compat import CompilerParams
 
 
 def _join_kernel(sched_ref, xi_ref, xj_ref, hi_out, hj_out, *, eps2: float):
@@ -81,7 +89,7 @@ def simjoin_counts_swizzled(
             jax.ShapeDtypeStruct((steps, bp), jnp.int32),
             jax.ShapeDtypeStruct((steps, bp), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -8,6 +8,8 @@ and Z-order.
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # test-only dep; see pyproject [test] extra
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

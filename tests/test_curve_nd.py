@@ -1,0 +1,397 @@
+"""d-dimensional curve codec + registry tests (no hypothesis needed).
+
+Covers the refactor's contract:
+  * round-trip encode∘decode = id for d ∈ {2, 3, 4};
+  * bit-identity of the d-dim codec with the 2-D Mealy automaton;
+  * unit-step (locality) property of d-dim Hilbert paths;
+  * JAX-vs-numpy codec equivalence;
+  * registry paths bit-identical to the legacy 2-D schedule tables;
+  * `tile_schedule_nd` validity + caching;
+  * 3-D-scheduled matmul against the jnp.dot oracle (interpret mode);
+  * Hilbert-ordered k-means / ε-join / token batching equivalence.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.core import (
+    CURVES,
+    available_curves,
+    canonical_nbits,
+    curve_supports,
+    get_curve,
+    gray_decode_nd,
+    gray_encode,
+    gray_encode_nd,
+    hilbert_decode,
+    hilbert_decode_nd,
+    hilbert_encode,
+    hilbert_encode_nd,
+    hilbert_encode_nd_jax,
+    hilbert_path,
+    hilbert_path_nd,
+    hilbert_sort_key,
+    operand_reloads_nd,
+    tile_schedule,
+    tile_schedule_device,
+    tile_schedule_nd,
+    zorder_decode_nd,
+    zorder_encode,
+    zorder_encode_nd,
+)
+from repro.core.schedule import mark_first_visits, min_revisit_gap
+
+RNG = np.random.default_rng(7)
+
+
+def unit_steps(p: np.ndarray) -> np.ndarray:
+    return np.abs(np.diff(np.asarray(p, dtype=np.int64), axis=0)).sum(axis=1)
+
+
+def is_bijective(p: np.ndarray, shape: tuple[int, ...]) -> bool:
+    p = np.asarray(p)
+    if p.shape != (int(np.prod(shape)), len(shape)):
+        return False
+    if len(p) != len(set(map(tuple, p.tolist()))):
+        return False
+    return all(
+        (p[:, k] >= 0).all() and (p[:, k] < s).all()
+        for k, s in enumerate(shape)
+    )
+
+
+# ---------------------------------------------------------------------------
+# d-dimensional Hilbert codec
+# ---------------------------------------------------------------------------
+
+class TestHilbertNd:
+    @pytest.mark.parametrize("d,nbits", [(2, 8), (3, 6), (4, 4)])
+    def test_roundtrip(self, d, nbits):
+        c = RNG.integers(0, 1 << nbits, size=(4096, d))
+        h = hilbert_encode_nd(c, nbits)
+        np.testing.assert_array_equal(hilbert_decode_nd(h, d, nbits), c)
+
+    @pytest.mark.parametrize("d,nbits", [(2, 4), (3, 3), (4, 2)])
+    def test_bijective_on_cube(self, d, nbits):
+        side = 1 << nbits
+        p = hilbert_path_nd((side,) * d)
+        assert is_bijective(p, (side,) * d)
+        h = hilbert_encode_nd(p, nbits)
+        np.testing.assert_array_equal(h, np.arange(side**d))
+
+    def test_bit_identity_with_mealy_2d(self):
+        # the d=2 restriction of the generic codec IS the paper's automaton
+        i = RNG.integers(0, 1 << 12, size=4096)
+        j = RNG.integers(0, 1 << 12, size=4096)
+        c = np.stack([i, j], axis=-1)
+        np.testing.assert_array_equal(
+            hilbert_encode_nd(c, 12), hilbert_encode(i, j, nbits=12)
+        )
+        # and the inverse
+        h = hilbert_encode(i, j, nbits=12)
+        ii, jj = hilbert_decode(h, nbits=12)
+        np.testing.assert_array_equal(
+            hilbert_decode_nd(h, 2, 12), np.stack([ii, jj], axis=-1)
+        )
+
+    @pytest.mark.parametrize("d", [2, 3, 4])
+    def test_resolution_freeness(self, d):
+        # orientation cycles with period d: any nbits rounded up to a
+        # multiple of d yields the same canonical order values
+        c = RNG.integers(0, 1 << 3, size=(512, d))
+        h3 = hilbert_encode_nd(c, 3)
+        extras = (1, 2, 3) if d < 4 else (1, 2)  # keep d*nbits <= 62
+        for extra in extras:
+            np.testing.assert_array_equal(hilbert_encode_nd(c, 3 + extra * d), h3)
+        assert canonical_nbits(3, d) % d == 0
+
+    @pytest.mark.parametrize("d,nbits", [(2, 3), (3, 2), (4, 2)])
+    def test_unit_step_property(self, d, nbits):
+        side = 1 << nbits
+        p = hilbert_path_nd((side,) * d)
+        assert (unit_steps(p) == 1).all()
+        assert tuple(p[0]) == (0,) * d
+
+    def test_non_pow2_shapes_clip(self):
+        for shape in [(5, 7, 3), (6, 6, 6), (3, 9)]:
+            p = hilbert_path_nd(shape)
+            assert is_bijective(p, shape)
+
+    @pytest.mark.parametrize("d,nbits", [(2, 8), (3, 7), (4, 4)])
+    def test_jax_matches_numpy(self, d, nbits):
+        c = RNG.integers(0, 1 << nbits, size=(2048, d))
+        h_np = hilbert_encode_nd(c, nbits)
+        h_jx = hilbert_encode_nd_jax(jnp.asarray(c, jnp.int32), nbits)
+        np.testing.assert_array_equal(np.asarray(h_jx), h_np)
+
+    @pytest.mark.parametrize("d", [2, 3])
+    def test_sort_key_matches_host_codec(self, d):
+        nbits = 8 if d == 2 else 6
+        c = RNG.integers(0, 1 << nbits, size=(1024, d))
+        k = hilbert_sort_key(jnp.asarray(c, jnp.int32), nbits)
+        np.testing.assert_array_equal(np.asarray(k), hilbert_encode_nd(c, nbits))
+
+
+class TestZGrayNd:
+    @pytest.mark.parametrize("d,nbits", [(2, 10), (3, 7), (4, 5)])
+    def test_zorder_roundtrip(self, d, nbits):
+        c = RNG.integers(0, 1 << nbits, size=(2048, d))
+        z = zorder_encode_nd(c, nbits)
+        np.testing.assert_array_equal(zorder_decode_nd(z, d, nbits), c)
+
+    @pytest.mark.parametrize("d,nbits", [(2, 10), (3, 7), (4, 5)])
+    def test_gray_roundtrip(self, d, nbits):
+        c = RNG.integers(0, 1 << nbits, size=(2048, d))
+        g = gray_encode_nd(c, nbits)
+        np.testing.assert_array_equal(gray_decode_nd(g, d, nbits), c)
+
+    def test_bit_identity_with_2d_shiftmask(self):
+        i = RNG.integers(0, 1 << 15, size=1024)
+        j = RNG.integers(0, 1 << 15, size=1024)
+        c = np.stack([i, j], axis=-1)
+        np.testing.assert_array_equal(zorder_encode_nd(c, 15), zorder_encode(i, j))
+        np.testing.assert_array_equal(gray_encode_nd(c, 15), gray_encode(i, j))
+
+    def test_gray_single_bitflip_3d(self):
+        # consecutive Gray-order cells differ in exactly one interleaved bit
+        p = get_curve("gray").path((8, 8, 8))
+        z = zorder_encode_nd(p, 3)
+        x = np.bitwise_xor(z[1:], z[:-1])
+        assert (np.bitwise_and(x, x - 1) == 0).all() and (x > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_all_legacy_curves_registered(self):
+        for name in CURVES:
+            assert get_curve(name).name == name
+        assert "hilbert" in available_curves(3)
+        assert "fur" not in available_curves(3)
+        assert curve_supports("fur", 2) and not curve_supports("fur", 3)
+        with pytest.raises(ValueError):
+            get_curve("nope")
+
+    @pytest.mark.parametrize("curve", CURVES)
+    @pytest.mark.parametrize("shape", [(4, 4), (5, 9), (16, 12), (8, 8)])
+    def test_registry_path_matches_tile_schedule_2d(self, curve, shape):
+        # the registry IS the schedule factory's backend: bit-identical
+        path = get_curve(curve).path(shape)
+        np.testing.assert_array_equal(path, tile_schedule(curve, *shape))
+        assert is_bijective(path, shape)
+
+    def test_hilbert_2d_fast_paths_preserved(self):
+        # pow2 square -> vectorised Fig.5 generator == Mealy decode
+        np.testing.assert_array_equal(
+            get_curve("hilbert").path((16, 16)), hilbert_path(4)
+        )
+
+    def test_zigzag_nd_unit_step(self):
+        for shape in [(4, 4, 4), (3, 5, 2), (2, 3, 4, 2)]:
+            p = get_curve("zigzag").path(shape)
+            assert is_bijective(p, shape)
+            assert (unit_steps(p) == 1).all()
+
+    def test_row_col_nd(self):
+        p = get_curve("row").path((3, 4, 5))
+        assert is_bijective(p, (3, 4, 5))
+        # row-major: last axis fastest
+        assert (p[:5, 2] == np.arange(5)).all()
+        pc = get_curve("col").path((3, 4, 5))
+        assert is_bijective(pc, (3, 4, 5))
+        assert (pc[:3, 0] == np.arange(3)).all()
+
+    def test_unsupported_ndim_raises(self):
+        with pytest.raises(ValueError):
+            get_curve("fur").path((4, 4, 4))
+        with pytest.raises(ValueError):
+            get_curve("peano").path((3, 3, 3))
+
+    @pytest.mark.parametrize("curve", ["row", "zorder", "gray", "hilbert"])
+    def test_encode_decode_consistent_with_path(self, curve):
+        c = get_curve(curve)
+        p = c.path((8, 8))
+        h = np.asarray(c.encode(p, 3))
+        np.testing.assert_array_equal(h, np.arange(64))
+        np.testing.assert_array_equal(c.decode(np.arange(64), 2, 3), p)
+
+
+# ---------------------------------------------------------------------------
+# nd schedules
+# ---------------------------------------------------------------------------
+
+class TestScheduleNd:
+    def test_hilbert_888_acceptance(self):
+        t = tile_schedule_nd("hilbert", (8, 8, 8))
+        assert t.shape == (512, 3) and t.dtype == np.int32
+        assert is_bijective(t, (8, 8, 8))
+        assert (unit_steps(t) == 1).all()
+
+    @pytest.mark.parametrize("curve", ["row", "zigzag", "zorder", "gray", "hilbert"])
+    @pytest.mark.parametrize("shape", [(4, 4, 4), (4, 5, 3), (2, 2, 2, 2)])
+    def test_bijective_nd(self, curve, shape):
+        assert is_bijective(tile_schedule_nd(curve, shape), shape)
+
+    def test_cache_readonly_and_copy_semantics(self):
+        t1 = tile_schedule_nd("hilbert", (4, 4, 4))
+        t2 = tile_schedule_nd("hilbert", (4, 4, 4))
+        assert t1 is t2  # LRU-cached
+        assert not t1.flags.writeable
+        legacy = tile_schedule("hilbert", 4, 4)
+        assert legacy.flags.writeable  # legacy interface hands out copies
+        legacy[0, 0] = 99
+        assert tile_schedule("hilbert", 4, 4)[0, 0] != 99
+
+    def test_device_schedule_cached(self):
+        s1 = tile_schedule_device("hilbert", (4, 4, 4), first_visit_axes=(0, 1))
+        s2 = tile_schedule_device("hilbert", (4, 4, 4), first_visit_axes=(0, 1))
+        assert s1 is s2
+        assert s1.shape == (64, 4)
+
+    def test_mark_first_visits(self):
+        sched = tile_schedule_nd("hilbert", (4, 4, 4))
+        flagged = mark_first_visits(sched, (0, 1))
+        assert flagged.shape == (64, 4)
+        assert flagged[:, 3].sum() == 16  # one first-visit per (i, j) tile
+        seen = set()
+        for i, j, k, f in flagged.tolist():
+            assert bool(f) == ((i, j) not in seen)
+            seen.add((i, j))
+
+    def test_min_revisit_gap_is_3(self):
+        # the hazard-safety property the 3-D accumulate kernel relies on
+        for curve in ("hilbert", "zigzag"):
+            sched = np.asarray(tile_schedule_nd(curve, (8, 8, 8)), dtype=np.int64)
+            last_seen: dict[tuple, int] = {}
+            gaps = []
+            for s, (i, j, k) in enumerate(map(tuple, sched[:, :3])):
+                if (i, j) in last_seen:
+                    gaps.append(s - last_seen[(i, j)])
+                last_seen[(i, j)] = s
+            revisit_gaps = [g for g in gaps if g > 1]
+            # zigzag keeps k contiguous per (i, j): no non-consecutive
+            # revisits at all; hilbert revisits always have gap >= 3
+            assert all(g >= 3 for g in revisit_gaps)
+            if curve == "hilbert":
+                assert revisit_gaps and min(revisit_gaps) >= 3
+
+    def test_min_revisit_gap_audit(self):
+        # unit-step cube: gap >= 3 guaranteed; clipped cover: gap 2 exists
+        cube = tile_schedule_nd("hilbert", (8, 8, 8))
+        assert min_revisit_gap(cube, (0, 1)) >= 3
+        clipped = tile_schedule_nd("hilbert", (2, 2, 3))
+        assert min_revisit_gap(clipped, (0, 1)) == 2  # the hardware hazard
+
+    def test_non_resolution_free_decode_requires_nbits(self):
+        row = get_curve("row")
+        h = row.encode(np.array([[1, 100]]), nbits=7)
+        np.testing.assert_array_equal(row.decode(h, 2, 7), [[1, 100]])
+        with pytest.raises(ValueError, match="resolution-free"):
+            row.decode(h, 2)
+        with pytest.raises(ValueError, match="resolution-free"):
+            get_curve("col").decode(h, 2)
+        # resolution-free codes still infer nbits
+        np.testing.assert_array_equal(
+            get_curve("hilbert").decode(np.arange(4), 2),
+            [[0, 0], [1, 0], [1, 1], [0, 1]],
+        )
+
+    def test_hilbert_3d_locality_beats_row(self):
+        from repro.core.schedule import lru_misses
+
+        sched_h = tile_schedule_nd("hilbert", (8, 8, 8))
+        sched_r = tile_schedule_nd("row", (8, 8, 8))
+
+        def stream(s):
+            for i, j, k in np.asarray(s):
+                yield ("A", i, k)
+                yield ("B", k, j)
+                yield ("C", i, j)
+
+        assert lru_misses(stream(sched_h), 32) < lru_misses(stream(sched_r), 32)
+
+    def test_operand_reloads_nd_unit_step_bound(self):
+        # unit-step => exactly 2 of the 3 pair-projections change per step
+        sched = tile_schedule_nd("hilbert", (8, 8, 8))
+        total = (
+            operand_reloads_nd(sched, (0, 2))
+            + operand_reloads_nd(sched, (2, 1))
+            + operand_reloads_nd(sched, (0, 1))
+        )
+        assert total == 2 * (len(sched) - 1) + 3
+
+
+# ---------------------------------------------------------------------------
+# Kernel + pipeline integration (interpret mode)
+# ---------------------------------------------------------------------------
+
+class TestNdIntegration:
+    @pytest.mark.parametrize("curve", ["hilbert", "zorder", "row", "fur"])
+    def test_matmul_3d_vs_oracle(self, curve):
+        from repro.kernels import ops
+
+        a = jnp.asarray(RNG.normal(size=(96, 64)), jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(64, 128)), jnp.float32)
+        out = ops.matmul(
+            a, b, curve=curve, bm=32, bn=32, bk=32,
+            schedule_ndim=3, interpret=True,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(jnp.dot(a, b)), rtol=1e-4, atol=1e-4
+        )
+
+    def test_matmul_3d_nonaligned(self):
+        from repro.kernels import ops
+
+        a = jnp.asarray(RNG.normal(size=(100, 52)), jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(52, 84)), jnp.float32)
+        out = ops.matmul(a, b, bm=32, bn=32, bk=32, schedule_ndim=3,
+                         interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(jnp.dot(a, b)), rtol=1e-4, atol=1e-4
+        )
+
+    def test_kmeans_hilbert_order_matches_oracle(self):
+        from repro.kernels import ops, ref
+
+        x = jnp.asarray(RNG.normal(size=(300, 8)), jnp.float32)
+        c = jnp.asarray(RNG.normal(size=(10, 8)), jnp.float32)
+        d2, asg = ops.kmeans_assign(
+            x, c, bp=128, bc=16, hilbert_order=True, interpret=True
+        )
+        want_d2, want_asg = ref.kmeans_assign(x, c)
+        np.testing.assert_array_equal(np.asarray(asg), np.asarray(want_asg))
+        np.testing.assert_allclose(
+            np.asarray(d2), np.asarray(want_d2), rtol=1e-4, atol=1e-4
+        )
+
+    def test_simjoin_hilbert_order_matches_oracle(self):
+        from repro.kernels import ops, ref
+
+        x = jnp.asarray(RNG.normal(size=(300, 4)) * 0.5, jnp.float32)
+        out = ops.simjoin_counts(x, eps=0.8, bp=128, hilbert_order=True,
+                                 interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(ref.simjoin_counts(x, 0.8))
+        )
+
+    def test_pipeline_hilbert_batching(self):
+        from repro.data.pipeline import SyntheticPipeline, hilbert_token_order
+
+        base = SyntheticPipeline(vocab=100, global_batch=32, seq=16)
+        ordered = SyntheticPipeline(
+            vocab=100, global_batch=32, seq=16, hilbert_order=True
+        )
+        b0, b1 = base.batch_at(5), ordered.batch_at(5)
+        perm = hilbert_token_order(b0["tokens"])
+        assert sorted(perm.tolist()) == list(range(32))  # permutation
+        np.testing.assert_array_equal(b1["tokens"], b0["tokens"][perm])
+        np.testing.assert_array_equal(b1["labels"], b0["labels"][perm])
+        # exact-resume: reorder is a pure function of the batch
+        np.testing.assert_array_equal(
+            ordered.batch_at(5)["tokens"], b1["tokens"]
+        )
