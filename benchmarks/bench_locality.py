@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.core import (
     available_curves,
+    miss_counts,
     miss_curve,
     operand_reloads,
     operand_reloads_nd,
@@ -52,13 +53,14 @@ def run_3d(side: int = 16) -> list[dict]:
             "value": a + b + o,
             "derived": f"A={a};B={b};C={o};min={2 * side**3 + 1}",
         })
-        from repro.core.schedule import lru_misses
-
-        for cs in cache_sizes:
+        # one reuse-distance pass covers every cache size (not one LRU
+        # simulation per size)
+        mc = miss_counts(list(_tile_stream_3d(sched)), cache_sizes)
+        for cs, misses in mc.items():
             rows.append({
                 "bench": "locality",
                 "name": f"{curve}_3d_tile_misses_c{cs}",
-                "value": lru_misses(_tile_stream_3d(sched), cs),
+                "value": misses,
                 "derived": f"tile-LRU cache={cs} blocks",
             })
     return rows

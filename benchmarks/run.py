@@ -64,6 +64,12 @@ def main() -> None:
             derived = str(row.get("derived", "")).replace(",", ";")
             print(f"{row['bench']},{row['name']},{row['value']},{derived}")
     if json_path:
+        if not collected:
+            # an empty snapshot silently breaks the perf trajectory — fail
+            # loudly instead of committing {"rows": []}
+            print(f"# refusing to write {json_path}: 0 rows collected",
+                  file=sys.stderr)
+            sys.exit(1)
         with open(json_path, "w") as f:
             json.dump({"rows": collected}, f, indent=1)
         print(f"# wrote {json_path} ({len(collected)} rows)", file=sys.stderr)

@@ -9,6 +9,7 @@ Modules:
   fgf           jump-over walker for general regions        (paper §6.2)
   nano          nano-programs (packed curve fragments)      (paper §6.3)
   hilbert_nd    d-dimensional Hilbert/Z-order/Gray codecs   (beyond-paper)
+  fgf_nd        d-dimensional jump-over walker              (beyond-paper)
   curve         SpaceFillingCurve abstraction + registry    (beyond-paper)
   schedule      tile-schedule factory + traffic models      (TPU adaptation)
   jax_hilbert   device-side vectorised codec                (TPU adaptation)
@@ -35,6 +36,17 @@ from .fgf import (
     rect_classifier,
     triangle_classifier,
 )
+from .fgf_nd import (
+    BandRegion,
+    BoxRegion,
+    IntersectRegion,
+    PredicateRegion,
+    TriangleRegion,
+    fgf_box_nd,
+    fgf_path_nd,
+    fgf_triangle_nd,
+    hilbert_jump_path_nd,
+)
 from .fur import fur_is_unit_step, fur_path
 from .hilbert import (
     canonical_start_state,
@@ -47,12 +59,20 @@ from .hilbert import (
 )
 from .hilbert_nd import (
     canonical_nbits,
+    canonical_start_state_nd,
+    child_corner_nd,
+    child_state_nd,
+    child_transforms_nd,
+    clip_path_nd,
+    decode_from_state_nd,
     gray_decode_nd,
     gray_encode_nd,
     gray_path_nd,
     hilbert_decode_nd,
+    hilbert_decode_raw_nd,
     hilbert_encode_nd,
     hilbert_path_nd,
+    identity_state_nd,
     zorder_decode_nd,
     zorder_encode_nd,
     zorder_path_nd,
@@ -74,18 +94,23 @@ from .lindenmayer import (
 from .peano import peano_decode, peano_encode, peano_path
 from .schedule import (
     CURVES,
+    lru_misses,
     matmul_traffic_bytes,
     matmul_traffic_bytes_3d,
+    min_revisit_gap,
+    miss_counts,
     miss_curve,
     operand_reloads,
     operand_reloads_nd,
     pair_stream,
+    reuse_distances,
     schedule_cache_clear,
     schedule_hilbert_values,
     tile_schedule,
     tile_schedule_device,
     tile_schedule_nd,
     triangle_schedule,
+    triangle_schedule_nd,
 )
 from .zorder import (
     gray_decode,

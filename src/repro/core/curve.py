@@ -252,7 +252,12 @@ class GrayCurve(SpaceFillingCurve):
 
 class HilbertCurve(SpaceFillingCurve):
     """Hilbert curve: Mealy automaton + FGF jump-over in 2-D (paper §3/§6),
-    canonical Butz/Lawder codec for d >= 3 (bit-identical at d = 2)."""
+    canonical Butz/Lawder codec for d >= 3 (bit-identical at d = 2).
+
+    Paths for non-power-of-two shapes never materialise the full cover:
+    2-D goes through the table-driven ``fgf`` walker, d >= 3 through the
+    d-dimensional jump-over (``fgf_nd`` via ``hilbert_path_nd``), so
+    generation cost is output-linear in every dimension."""
 
     name = "hilbert"
     resolution_free = True

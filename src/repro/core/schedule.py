@@ -29,7 +29,6 @@ from typing import Iterable
 
 import numpy as np
 
-from . import fgf
 from .curve import get_curve
 
 CURVES = ("row", "col", "zigzag", "zorder", "gray", "hilbert", "fur", "peano")
@@ -96,17 +95,21 @@ def min_revisit_gap(sched: np.ndarray, axes: tuple[int, ...]) -> int:
     Unit-step schedules (power-of-two hypercubes) guarantee >= 3; clipped
     covers of other shapes can produce gap-2 revisits, so audit before
     trusting a schedule on hardware (see matmul_swizzled_3d docstring).
+
+    Vectorised: lexsort groups equal projections (stably, so steps stay
+    ascending within a group) and successive-visit gaps are one diff.
     """
     s = np.asarray(sched, dtype=np.int64)
-    last: dict[tuple, int] = {}
-    best = 0
-    for step, key in enumerate(map(tuple, s[:, list(axes)])):
-        if key in last:
-            gap = step - last[key]
-            if gap > 1 and (best == 0 or gap < best):
-                best = gap
-        last[key] = step
-    return best
+    if len(s) < 2 or not axes:
+        return 0
+    proj = s[:, list(axes)]
+    order = np.lexsort(proj.T[::-1])
+    ps = proj[order]
+    steps = order.astype(np.int64)  # lexsort is stable: ascending per group
+    same = (ps[1:] == ps[:-1]).all(axis=1)
+    gaps = steps[1:] - steps[:-1]
+    revisit = gaps[same & (gaps > 1)]
+    return int(revisit.min()) if len(revisit) else 0
 
 
 def tile_schedule_device(
@@ -146,19 +149,40 @@ def schedule_cache_clear() -> None:
     _device_schedule.cache_clear()
 
 
-def triangle_schedule(curve: str, n: int, *, strict: bool = True) -> np.ndarray:
-    """Visit order for the lower triangle i > j (or i >= j) of n×n.
+def triangle_schedule_nd(
+    curve: str,
+    shape: tuple[int, ...],
+    *,
+    axes: tuple[int, int] = (0, 1),
+    strict: bool = True,
+) -> np.ndarray:
+    """Visit order for the cells of ``shape`` with x_a > x_b (or >=).
 
-    ``hilbert`` uses FGF jump-over (true Hilbert values, O(log) re-entry);
-    other curves filter their full schedule (the paper's naive strategy).
+    Any dimension: e.g. the (i, j, k) tile grid of a triangular-solve or
+    Cholesky trailing update keeps only i > j panels.  ``hilbert`` runs
+    the d-dimensional FGF jump-over walker (true canonical Hilbert
+    values, O(log) re-entry, output-linear generation); other curves
+    filter their full schedule (the paper's naive strategy).
     """
+    shape = tuple(int(s) for s in shape)
+    if any(s <= 0 for s in shape):
+        return np.zeros((0, len(shape)), dtype=np.int32)
     if curve == "hilbert":
-        out = fgf.fgf_triangle(fgf.cover_order(n), n=n, strict=strict)[:, 1:]
+        from . import fgf_nd
+
+        out = fgf_nd.fgf_triangle_nd(shape, axes=axes, strict=strict)[:, 1:]
     else:
-        full = tile_schedule(curve, n, n).astype(np.int64)
-        keep = full[:, 0] > full[:, 1] if strict else full[:, 0] >= full[:, 1]
+        full = np.asarray(tile_schedule_nd(curve, shape), dtype=np.int64)
+        a, b = axes
+        keep = full[:, a] > full[:, b] if strict else full[:, a] >= full[:, b]
         out = full[keep]
     return np.ascontiguousarray(out.astype(np.int32))
+
+
+def triangle_schedule(curve: str, n: int, *, strict: bool = True) -> np.ndarray:
+    """Visit order for the lower triangle i > j (or i >= j) of n×n
+    (2-D legacy interface; see :func:`triangle_schedule_nd`)."""
+    return triangle_schedule_nd(curve, (int(n), int(n)), strict=strict)
 
 
 def schedule_hilbert_values(sched: np.ndarray) -> np.ndarray:
@@ -274,7 +298,12 @@ def matmul_traffic_bytes_3d(
 
 
 def lru_misses(stream: Iterable, cache_size: int) -> int:
-    """Classic LRU miss count over an object-id stream (paper Fig. 1e)."""
+    """Classic LRU miss count over an object-id stream (paper Fig. 1e).
+
+    Reference simulator for a *single* cache size; evaluating many sizes
+    should go through :func:`miss_counts`, which computes LRU stack
+    (reuse) distances in one pass and reads every size off a histogram.
+    """
     cache: OrderedDict = OrderedDict()
     misses = 0
     for key in stream:
@@ -286,6 +315,90 @@ def lru_misses(stream: Iterable, cache_size: int) -> int:
             if len(cache) > cache_size:
                 cache.popitem(last=False)
     return misses
+
+
+def _count_larger_before(p: np.ndarray) -> np.ndarray:
+    """c[t] = #{j < t : p[j] > p[t]} for every t, vectorised.
+
+    Bottom-up merge: blocks of width w are kept value-sorted; merging a
+    [left | right] row pair with a stable axis-1 argsort gives, for each
+    right element, its rank among both halves — rank minus within-right
+    rank is the number of *smaller-or-equal* left elements, and left
+    elements all precede right elements in time.  O(n log^2 n) in numpy
+    ops, no python per element (Fenwick-tree-free inversion counting).
+    """
+    n0 = len(p)
+    if n0 == 0:
+        return np.zeros(0, dtype=np.int64)
+    n = 1 << max(int(n0 - 1).bit_length(), 0)
+    vals = np.full(n, np.iinfo(np.int64).min, dtype=np.int64)  # pad: never ">"
+    vals[:n0] = p
+    idx = np.arange(n)
+    counts = np.zeros(n, dtype=np.int64)
+    w = 1
+    while w < n:
+        rows_v = vals.reshape(-1, 2 * w)
+        rows_i = idx.reshape(-1, 2 * w)
+        order = np.argsort(rows_v, axis=1, kind="stable")
+        rank = np.empty_like(order)
+        np.put_along_axis(
+            rank, order,
+            np.broadcast_to(np.arange(2 * w), order.shape), axis=1,
+        )
+        # right-half slots: #left <= value = merged rank - within-right rank
+        # (stable sort puts equal left elements first, counting them as <=)
+        n_left_le = rank[:, w:] - np.arange(w)
+        counts[rows_i[:, w:].ravel()] += (w - n_left_le).ravel()
+        vals = np.take_along_axis(rows_v, order, axis=1).ravel()
+        idx = np.take_along_axis(rows_i, order, axis=1).ravel()
+        w <<= 1
+    return counts[:n0]
+
+
+def reuse_distances(stream: Iterable) -> np.ndarray:
+    """LRU stack distance of every access in one pass; -1 for cold misses.
+
+    d[t] = number of *distinct other* keys touched since the previous
+    access to the same key; an access hits a size-C LRU cache iff
+    0 <= d[t] < C.  Identity used: with prev[t] the previous access
+    position (-1 if none), the accesses in the window (prev[t], t) that
+    are *not* the first in-window occurrence of their key are exactly
+    those with prev[j] > prev[t], so
+    d[t] = (t - prev[t] - 1) - #{j < t : prev[j] > prev[t]}
+    (prev[j] > prev[t] forces prev[t] < prev[j] < j < t), and the count
+    term is inversion counting — vectorised in
+    :func:`_count_larger_before`.
+    """
+    last: dict = {}
+    keys = stream if isinstance(stream, list) else list(stream)
+    prev = np.empty(len(keys), dtype=np.int64)
+    for t, k in enumerate(keys):
+        prev[t] = last.get(k, -1)
+        last[k] = t
+    dup = _count_larger_before(prev)
+    t_idx = np.arange(len(keys), dtype=np.int64)
+    return np.where(prev >= 0, t_idx - prev - 1 - dup, -1)
+
+
+def miss_counts(stream: Iterable, cache_sizes: Iterable[int]) -> dict[int, int]:
+    """LRU miss counts for *all* ``cache_sizes`` from a single pass.
+
+    One reuse-distance computation, then every size is a histogram
+    suffix-sum: misses(C) = cold + #{d >= C} — instead of re-simulating
+    the stream per cache size (== :func:`lru_misses` for each size,
+    asserted in tests/test_fgf_nd.py).
+    """
+    d = reuse_distances(stream if isinstance(stream, list) else list(stream))
+    cold = int((d < 0).sum())
+    hits = d[d >= 0]
+    hist = np.bincount(hits) if len(hits) else np.zeros(1, dtype=np.int64)
+    # suffix[c] = #accesses with reuse distance >= c
+    suffix = np.concatenate([np.cumsum(hist[::-1])[::-1], [0]])
+    out = {}
+    for c in cache_sizes:
+        c = int(c)
+        out[c] = cold + int(suffix[min(c, len(suffix) - 1)])
+    return out
 
 
 def pair_stream(sched: np.ndarray) -> Iterable:
@@ -300,5 +413,8 @@ def pair_stream(sched: np.ndarray) -> Iterable:
 def miss_curve(
     sched: np.ndarray, cache_sizes: Iterable[int]
 ) -> dict[int, int]:
-    """Cache-miss counts for a schedule across cache sizes (Fig. 1e)."""
-    return {int(s): lru_misses(pair_stream(sched), int(s)) for s in cache_sizes}
+    """Cache-miss counts for a schedule across cache sizes (Fig. 1e).
+
+    Single-pass: reuse-distance histogram + suffix sum, not one LRU
+    simulation per size (see :func:`miss_counts`)."""
+    return miss_counts(list(pair_stream(sched)), [int(s) for s in cache_sizes])
