@@ -93,7 +93,9 @@ from .lindenmayer import (
 )
 from .peano import peano_decode, peano_encode, peano_path
 from .schedule import (
+    CHOLESKY_PHASES,
     CURVES,
+    FW_PHASES,
     lru_misses,
     matmul_traffic_bytes,
     matmul_traffic_bytes_3d,
@@ -103,6 +105,10 @@ from .schedule import (
     operand_reloads,
     operand_reloads_nd,
     pair_stream,
+    phase_barrier_gaps,
+    phase_barriers,
+    phased_schedule,
+    phased_schedule_device,
     reuse_distances,
     schedule_cache_clear,
     schedule_hilbert_values,

@@ -86,7 +86,12 @@ def mark_first_visits(sched: np.ndarray, axes: tuple[int, ...]) -> np.ndarray:
     )
 
 
-def min_revisit_gap(sched: np.ndarray, axes: tuple[int, ...]) -> int:
+def min_revisit_gap(
+    sched: np.ndarray,
+    axes: tuple[int, ...],
+    *,
+    barriers: np.ndarray | None = None,
+) -> int:
     """Smallest step distance between non-consecutive revisits of the same
     ``axes`` projection (0 when nothing is ever revisited non-consecutively).
 
@@ -95,6 +100,13 @@ def min_revisit_gap(sched: np.ndarray, axes: tuple[int, ...]) -> int:
     Unit-step schedules (power-of-two hypercubes) guarantee >= 3; clipped
     covers of other shapes can produce gap-2 revisits, so audit before
     trusting a schedule on hardware (see matmul_swizzled_3d docstring).
+
+    ``barriers`` (int group id per schedule row, groups contiguous in step
+    order) restricts the audit to revisit pairs *within* one barrier group
+    — the phased FW/Cholesky tables revisit tiles across phases by design
+    (the phase dependency serialises them), so only within-phase revisits
+    are schedule bugs.  Cross-barrier gaps are reported separately by
+    :func:`phase_barrier_gaps`.
 
     Vectorised: lexsort groups equal projections (stably, so steps stay
     ascending within a group) and successive-visit gaps are one diff.
@@ -107,9 +119,46 @@ def min_revisit_gap(sched: np.ndarray, axes: tuple[int, ...]) -> int:
     ps = proj[order]
     steps = order.astype(np.int64)  # lexsort is stable: ascending per group
     same = (ps[1:] == ps[:-1]).all(axis=1)
+    if barriers is not None:
+        bar = np.asarray(barriers, dtype=np.int64)[order]
+        same = same & (bar[1:] == bar[:-1])
     gaps = steps[1:] - steps[:-1]
     revisit = gaps[same & (gaps > 1)]
     return int(revisit.min()) if len(revisit) else 0
+
+
+def phase_barrier_gaps(
+    sched: np.ndarray, axes: tuple[int, ...], barriers: np.ndarray
+) -> dict[str, int]:
+    """Revisit-gap audit of a phased schedule, split at phase barriers.
+
+    Returns ``{"within": g, "cross": g}`` where ``within`` is the smallest
+    step gap (>= 1, consecutive included) between two visits of the same
+    ``axes`` projection inside one barrier group — any non-zero value
+    means a phase is not order-free and the schedule is WRONG for an
+    in-place kernel — and ``cross`` is the smallest non-consecutive gap
+    between visits in different groups: legal (the phase dependency
+    orders them) but the number a hardware pipeline's flush→re-fetch
+    distance must be audited against (see DESIGN.md §Phase-fusion).
+    Either is 0 when no such revisit pair exists.
+    """
+    s = np.asarray(sched, dtype=np.int64)
+    if len(s) < 2 or not axes:
+        return {"within": 0, "cross": 0}
+    proj = s[:, list(axes)]
+    order = np.lexsort(proj.T[::-1])
+    ps = proj[order]
+    steps = order.astype(np.int64)
+    bar = np.asarray(barriers, dtype=np.int64)[order]
+    same = (ps[1:] == ps[:-1]).all(axis=1)
+    same_group = bar[1:] == bar[:-1]
+    gaps = steps[1:] - steps[:-1]
+    within = gaps[same & same_group]
+    cross = gaps[same & ~same_group & (gaps > 1)]
+    return {
+        "within": int(within.min()) if len(within) else 0,
+        "cross": int(cross.min()) if len(cross) else 0,
+    }
 
 
 def tile_schedule_device(
@@ -147,6 +196,8 @@ def schedule_cache_clear() -> None:
     """Drop all cached schedules (host + device)."""
     _cached_path.cache_clear()
     _device_schedule.cache_clear()
+    _phased_schedule_host.cache_clear()
+    _phased_schedule_dev.cache_clear()
 
 
 def triangle_schedule_nd(
@@ -183,6 +234,129 @@ def triangle_schedule(curve: str, n: int, *, strict: bool = True) -> np.ndarray:
     """Visit order for the lower triangle i > j (or i >= j) of n×n
     (2-D legacy interface; see :func:`triangle_schedule_nd`)."""
     return triangle_schedule_nd(curve, (int(n), int(n)), strict=strict)
+
+
+# ---------------------------------------------------------------------------
+# Phase-fused schedules (paper §7: FW / Cholesky "maximum order-free parts")
+# ---------------------------------------------------------------------------
+
+FW_PHASES = ("diag", "row", "col", "trailing")
+CHOLESKY_PHASES = ("diag", "panel", "trailing")
+PHASED_KINDS = {"fw": FW_PHASES, "cholesky": CHOLESKY_PHASES}
+
+
+def phased_schedule(curve: str, nt: int, *, kind: str = "fw") -> np.ndarray:
+    """One table for ALL k-blocks of a phased factorisation/closure.
+
+    The paper decomposes each k iteration of Floyd-Warshall/Cholesky into
+    "maximum parts compatible with an arbitrary traversal"; this compiler
+    concatenates those parts — for every k — into a single read-only
+    ``int32[steps, 5]`` table with columns ``(phase_id, k_block, i, j,
+    first_visit)``, so the whole algorithm runs as ONE scalar-prefetch
+    ``pallas_call`` instead of 3-4 host-dispatched programs per k-block.
+
+    ``kind="fw"`` (phases diag / row / col / trailing): per k the diagonal
+    tile, the row panel ``(k, j)`` for all j, the column panel ``(i, k)``
+    for all i, then the trailing tiles ``i != k, j != k`` in the order the
+    ``curve`` gives them (for ``hilbert`` that is the true canonical
+    Hilbert order via the FGF machinery behind :func:`tile_schedule_nd`) —
+    exactly the tile sets of the retained per-k reference kernels.
+
+    ``kind="cholesky"`` (phases diag / panel / trailing): per k the
+    diagonal factor tile, the sub-diagonal panel ``(i, k), i > k``, then
+    the trailing lower-triangle tiles ``k < j <= i`` in FGF jump-over
+    order (:func:`triangle_schedule_nd`, ``strict=False``, offset by
+    ``k + 1``).
+
+    Column 4 flags the overall first visit of each ``(i, j)`` tile
+    (:func:`mark_first_visits` on the (i, j) projection).  The builder
+    asserts every phase is order-free — no ``(i, j)`` tile twice inside
+    one ``(k, phase)`` barrier group (:func:`min_revisit_gap` with
+    ``barriers=``) — which is what makes the in-place min/SYRK updates
+    hazard-free under ANY within-phase order.  Results are LRU-cached and
+    read-only.
+    """
+    return _phased_schedule_host(curve, int(nt), kind)
+
+
+@functools.lru_cache(maxsize=128)
+def _phased_schedule_host(curve: str, nt: int, kind: str) -> np.ndarray:
+    if kind not in PHASED_KINDS:
+        raise ValueError(f"unknown phased-schedule kind {kind!r}")
+    if nt <= 0:
+        out = np.zeros((0, 5), dtype=np.int32)
+        out.setflags(write=False)
+        return out
+    parts: list[np.ndarray] = []
+    ks = np.arange(nt, dtype=np.int64)
+    if kind == "fw":
+        full = np.asarray(tile_schedule_nd(curve, (nt, nt)), dtype=np.int64)
+        for k in ks:
+            parts.append(np.array([[0, k, k, k]], dtype=np.int64))
+            j = np.arange(nt, dtype=np.int64)
+            parts.append(np.column_stack(
+                [np.full(nt, 1), np.full(nt, k), np.full(nt, k), j]))
+            parts.append(np.column_stack(
+                [np.full(nt, 2), np.full(nt, k), j, np.full(nt, k)]))
+            trail = full[(full[:, 0] != k) & (full[:, 1] != k)]
+            if len(trail):
+                pre = np.column_stack(
+                    [np.full(len(trail), 3), np.full(len(trail), k)])
+                parts.append(np.concatenate([pre, trail], axis=1))
+    else:  # cholesky
+        for k in ks:
+            parts.append(np.array([[0, k, k, k]], dtype=np.int64))
+            rem = nt - int(k) - 1
+            if rem == 0:
+                continue
+            i = np.arange(k + 1, nt, dtype=np.int64)
+            parts.append(np.column_stack(
+                [np.full(rem, 1), np.full(rem, k), i, np.full(rem, k)]))
+            rel = np.asarray(
+                triangle_schedule_nd(curve, (rem, rem), strict=False),
+                dtype=np.int64,
+            ) + (int(k) + 1)
+            pre = np.column_stack(
+                [np.full(len(rel), 2), np.full(len(rel), k)])
+            parts.append(np.concatenate([pre, rel], axis=1))
+    sched = np.concatenate(parts, axis=0)
+    sched = mark_first_visits(sched, (2, 3))  # appends the flag column
+    bar = phase_barriers(sched, kind=kind)
+    # no phase may visit a tile twice, not even consecutively — that is
+    # the order-free property the in-place kernels rely on
+    assert phase_barrier_gaps(sched, (2, 3), bar)["within"] == 0
+    out = np.ascontiguousarray(sched.astype(np.int32))
+    out.setflags(write=False)
+    return out
+
+
+def phase_barriers(sched: np.ndarray, *, kind: str = "fw") -> np.ndarray:
+    """Barrier group id per row of a phased schedule: ``k * P + phase``.
+
+    Rows in the same group form one order-free part; consecutive group
+    ids are separated by a phase barrier (every tile of group g is final
+    before any tile of group g+1 reads it).
+    """
+    s = np.asarray(sched, dtype=np.int64)
+    nphases = len(PHASED_KINDS[kind])
+    return s[:, 1] * nphases + s[:, 0]
+
+
+def phased_schedule_device(curve: str, nt: int, *, kind: str = "fw"):
+    """Device-resident upload of :func:`phased_schedule` (LRU-cached)."""
+    return _phased_schedule_dev(curve, int(nt), kind)
+
+
+@functools.lru_cache(maxsize=128)
+def _phased_schedule_dev(curve: str, nt: int, kind: str):
+    import jax
+    import jax.numpy as jnp
+
+    # The first call may happen inside a jit trace (the fused kernels are
+    # jitted); materialise eagerly so the cached value is a concrete
+    # device array, not a leaked tracer.
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(_phased_schedule_host(curve, nt, kind), dtype=jnp.int32)
 
 
 def schedule_hilbert_values(sched: np.ndarray) -> np.ndarray:

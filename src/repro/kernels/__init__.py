@@ -9,8 +9,11 @@ paper's contribution (Hilbert/FUR/FGF iteration order) in TPU form.
 """
 from . import ops, ref
 from .attention import causal_schedule, flash_attention_swizzled, full_schedule
-from .cholesky import cholesky_blocked
-from .floyd_warshall import floyd_warshall_blocked
+from .cholesky import cholesky_blocked, cholesky_blocked_reference
+from .floyd_warshall import (
+    floyd_warshall_blocked,
+    floyd_warshall_blocked_reference,
+)
 from .kmeans import kmeans_assign_swizzled
 from .matmul import matmul_swizzled, tile_update_swizzled
 from .simjoin import simjoin_counts_swizzled
@@ -22,7 +25,9 @@ __all__ = [
     "full_schedule",
     "flash_attention_swizzled",
     "cholesky_blocked",
+    "cholesky_blocked_reference",
     "floyd_warshall_blocked",
+    "floyd_warshall_blocked_reference",
     "kmeans_assign_swizzled",
     "matmul_swizzled",
     "tile_update_swizzled",

