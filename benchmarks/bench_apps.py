@@ -163,4 +163,66 @@ def run() -> list[dict]:
                        f"{nd_fused} vs {nd_ref}; cold {cold_fused:.2f}s vs "
                        f"{cold_ref:.2f}s; bit_identical={bit}",
         })
+
+    # --- fused Lloyd k-means: 1 pallas_call per iteration under scan -------
+    from repro.kernels.kmeans import (
+        kmeans_assign_swizzled,
+        kmeans_lloyd_fused,
+        kmeans_update_swizzled,
+    )
+    from repro.kernels.pallas_compat import PallasCallCounter
+
+    xk = jnp.asarray(rng.normal(size=(1024, 16)), jnp.float32)
+    km_kw = dict(iters=3, curve="hilbert", bp=128, bc=16, interpret=True)
+    kmeans_lloyd_fused.clear_cache()
+    with PallasCallCounter() as spy:
+        t0 = time.perf_counter()
+        jax.block_until_ready(ops.kmeans_lloyd(xk, 64, fused=True, **km_kw)[0])
+        cold_f = time.perf_counter() - t0
+    nd_f = spy.count
+    kmeans_assign_swizzled.clear_cache()
+    kmeans_update_swizzled.clear_cache()
+    with PallasCallCounter() as spy:
+        ops.kmeans_lloyd(xk, 64, fused=False, **km_kw)
+    nd_r = spy.count
+    (cf, af), warm_f = _timed_best(
+        lambda: ops.kmeans_lloyd(xk, 64, fused=True, **km_kw))
+    (cr, ar), warm_r = _timed_best(
+        lambda: ops.kmeans_lloyd(xk, 64, fused=False, **km_kw))
+    bit = bool(
+        (np.asarray(cf) == np.asarray(cr)).all()
+        and (np.asarray(af) == np.asarray(ar)).all()
+    )
+    rows.append({
+        "bench": "apps_fused", "name": "kmeans_hilbert_lloyd3",
+        "value": round(warm_f * 1e3, 1),
+        "derived": f"ms warm (ref {warm_r * 1e3:.1f}); traced pallas_calls "
+                   f"{nd_f} (whole scanned loop) vs {nd_r}/iter; cold "
+                   f"{cold_f:.2f}s; bit_identical={bit}",
+    })
+
+    # --- ε-join pair emission: two-pass count → prefix-sum → emit ----------
+    from repro.kernels.simjoin import (
+        simjoin_emit_swizzled,
+        simjoin_tile_hits_swizzled,
+    )
+
+    xp = jnp.asarray(rng.normal(size=(768, 6)) * 0.6, jnp.float32)
+    simjoin_tile_hits_swizzled.clear_cache()
+    simjoin_emit_swizzled.clear_cache()
+    with PallasCallCounter() as spy:
+        ops.simjoin_pairs(xp, eps=0.8, curve="hilbert", bp=128, interpret=True)
+    nd_p = spy.count
+    pairs, warm_p = _timed_best(
+        lambda: ops.simjoin_pairs(xp, eps=0.8, curve="hilbert", bp=128,
+                                  interpret=True))
+    got = np.asarray(pairs)
+    got = got[np.lexsort((got[:, 1], got[:, 0]))]
+    bit = bool(np.array_equal(got, ref.simjoin_pairs(xp, 0.8)))
+    rows.append({
+        "bench": "apps_fused", "name": "simjoin_hilbert_pairs",
+        "value": round(warm_p * 1e3, 1),
+        "derived": f"ms warm; {len(got)} pairs; dispatches {nd_p} "
+                   f"(count+emit); bit_identical={bit}",
+    })
     return rows

@@ -12,14 +12,23 @@ from repro.kernels import ops, ref
 rng = np.random.default_rng(3)
 
 # --- k-means on 4 gaussian blobs -------------------------------------------
+# fused=True (default): each Lloyd iteration is ONE pallas_call (assign
+# phase in curve order + centroid-accumulation phase, off the kmeans
+# phased-schedule table) and the whole iters loop runs under lax.scan;
+# fused=False is the retained multi-dispatch reference — bit-identical
+# in interpret mode.
 centers = np.array([[0, 0], [8, 0], [0, 8], [8, 8]], dtype=np.float32)
 pts = np.concatenate([rng.normal(size=(256, 2)) * 0.4 + c for c in centers])
 x = jnp.asarray(pts, jnp.float32)
 c, assign = ops.kmeans_lloyd(x, 4, iters=10, curve="fur", seed=2, interpret=True)
+c_ref, a_ref = ops.kmeans_lloyd(x, 4, iters=10, curve="fur", seed=2,
+                                fused=False, interpret=True)
 order = np.argsort(np.asarray(c)[:, 0] + 10 * np.asarray(c)[:, 1])
-print("k-means centroids (hilbert-scheduled assignment):")
+print("k-means centroids (single-dispatch fused Lloyd):")
 for i in order:
     print(f"  ({float(c[i,0]):5.2f}, {float(c[i,1]):5.2f})")
+print(f"  fused == multi-dispatch reference: "
+      f"{bool((np.asarray(c) == np.asarray(c_ref)).all() and (np.asarray(assign) == np.asarray(a_ref)).all())}")
 
 # --- ε-similarity join -------------------------------------------------------
 xj = jnp.asarray(rng.normal(size=(512, 6)) * 0.8, jnp.float32)
@@ -28,6 +37,14 @@ want = ref.simjoin_counts(xj, 1.0)
 pairs = int(counts.sum()) // 2
 print(f"\nε-join (FGF jump-over): {pairs} pairs within eps=1.0 "
       f"(oracle match: {bool((counts == want).all())})")
+
+# pair emission: two-pass (count kernel → prefix-sum → emit kernel at the
+# prefetched per-tile offsets), pairs come back as (i, j) with i > j
+pij = ops.simjoin_pairs(xj, eps=1.0, curve="hilbert", bp=128, interpret=True)
+got = np.asarray(pij)
+got = got[np.lexsort((got[:, 1], got[:, 0]))]
+print(f"ε-join pairs emitted: {len(got)} "
+      f"(dense-oracle set match: {bool(np.array_equal(got, ref.simjoin_pairs(xj, 1.0)))})")
 
 # --- Floyd-Warshall -----------------------------------------------------------
 # fused=True (default): ONE pallas_call drives every phase of every

@@ -96,6 +96,9 @@ from .schedule import (
     CHOLESKY_PHASES,
     CURVES,
     FW_PHASES,
+    KMEANS_PHASES,
+    kmeans_schedule,
+    kmeans_schedule_device,
     lru_misses,
     matmul_traffic_bytes,
     matmul_traffic_bytes_3d,

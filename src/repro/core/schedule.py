@@ -198,6 +198,8 @@ def schedule_cache_clear() -> None:
     _device_schedule.cache_clear()
     _phased_schedule_host.cache_clear()
     _phased_schedule_dev.cache_clear()
+    _kmeans_schedule_host.cache_clear()
+    _kmeans_schedule_dev.cache_clear()
 
 
 def triangle_schedule_nd(
@@ -328,6 +330,81 @@ def _phased_schedule_host(curve: str, nt: int, kind: str) -> np.ndarray:
     out = np.ascontiguousarray(sched.astype(np.int32))
     out.setflags(write=False)
     return out
+
+
+KMEANS_PHASES = ("assign", "update")
+
+
+def kmeans_schedule(curve: str, pt: int, ct: int) -> np.ndarray:
+    """One table for a fully-fused Lloyd iteration.  int32[steps, 4].
+
+    Columns ``(phase, i, j, first_visit)`` over a ``pt × ct``
+    (point-tile × centroid-tile) grid:
+
+    * phase 0 (*assign*): every ``(i, j)`` tile in the ``curve``'s own
+      order — one coordinate changes per step under Hilbert/FUR, so one
+      of the two operand panels is always VMEM-resident.  The kernel
+      read-modify-writes a running (min, argmin) keyed by point tile
+      ``i``; ``first_visit`` flags the first phase-0 visit of each ``i``
+      (the "initialise instead of merge" signal,
+      :func:`mark_first_visits` style).
+    * phase 1 (*update*): each point tile once, in the order phase 0
+      first reached it (curve-derived, so the x panels re-stream in a
+      locality-preserving order).  The kernel accumulates per-centroid
+      partial sums/counts; ``first_visit`` flags the first phase-1 row
+      (the accumulator-init signal — the output block is shared by all
+      phase-1 steps).
+
+    Both phases are order-free on the blocks they RMW (no ``i`` twice in
+    a phase; asserted), the kmeans analogue of the FW/Cholesky
+    order-free-parts invariant.  Results are LRU-cached and read-only.
+    """
+    return _kmeans_schedule_host(curve, int(pt), int(ct))
+
+
+@functools.lru_cache(maxsize=128)
+def _kmeans_schedule_host(curve: str, pt: int, ct: int) -> np.ndarray:
+    if pt <= 0 or ct <= 0:
+        out = np.zeros((0, 4), dtype=np.int32)
+        out.setflags(write=False)
+        return out
+    tiles = np.asarray(tile_schedule_nd(curve, (pt, ct)), dtype=np.int64)
+    first_i = np.zeros(len(tiles), dtype=np.int64)
+    _, first_idx = np.unique(tiles[:, 0], return_index=True)
+    first_i[first_idx] = 1
+    assign = np.column_stack(
+        [np.zeros(len(tiles), dtype=np.int64), tiles, first_i])
+    # phase 1 walks point tiles in the order phase 0 first visited them
+    order = tiles[np.sort(first_idx), 0]
+    upd = np.column_stack([
+        np.ones(pt, dtype=np.int64),
+        order,
+        np.zeros(pt, dtype=np.int64),
+        np.concatenate([[1], np.zeros(pt - 1, dtype=np.int64)]),
+    ])
+    sched = np.concatenate([assign, upd], axis=0)
+    # audit: phase 0 is bijective over (i, j) — the running-min RMW on a
+    # point tile's (min, arg) block revisits i, but never the same (i, j)
+    # — and phase 1 visits each point tile exactly once (order-free)
+    assert len(np.unique(tiles, axis=0)) == pt * ct
+    assert len(np.unique(order)) == pt and len(order) == pt
+    out = np.ascontiguousarray(sched.astype(np.int32))
+    out.setflags(write=False)
+    return out
+
+
+def kmeans_schedule_device(curve: str, pt: int, ct: int):
+    """Device-resident upload of :func:`kmeans_schedule` (LRU-cached)."""
+    return _kmeans_schedule_dev(curve, int(pt), int(ct))
+
+
+@functools.lru_cache(maxsize=128)
+def _kmeans_schedule_dev(curve: str, pt: int, ct: int):
+    import jax
+    import jax.numpy as jnp
+
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(_kmeans_schedule_host(curve, pt, ct), dtype=jnp.int32)
 
 
 def phase_barriers(sched: np.ndarray, *, kind: str = "fw") -> np.ndarray:

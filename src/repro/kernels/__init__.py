@@ -14,9 +14,17 @@ from .floyd_warshall import (
     floyd_warshall_blocked,
     floyd_warshall_blocked_reference,
 )
-from .kmeans import kmeans_assign_swizzled
+from .kmeans import (
+    kmeans_assign_swizzled,
+    kmeans_lloyd_fused,
+    kmeans_lloyd_reference,
+)
 from .matmul import matmul_swizzled, tile_update_swizzled
-from .simjoin import simjoin_counts_swizzled
+from .simjoin import (
+    simjoin_counts_swizzled,
+    simjoin_emit_swizzled,
+    simjoin_tile_hits_swizzled,
+)
 
 __all__ = [
     "ops",
@@ -29,7 +37,11 @@ __all__ = [
     "floyd_warshall_blocked",
     "floyd_warshall_blocked_reference",
     "kmeans_assign_swizzled",
+    "kmeans_lloyd_fused",
+    "kmeans_lloyd_reference",
     "matmul_swizzled",
     "tile_update_swizzled",
     "simjoin_counts_swizzled",
+    "simjoin_emit_swizzled",
+    "simjoin_tile_hits_swizzled",
 ]

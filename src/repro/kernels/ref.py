@@ -61,6 +61,16 @@ def simjoin_counts(x: jax.Array, eps: float) -> jax.Array:
     return jnp.sum(hit.astype(jnp.int32), axis=1) - 1
 
 
+def simjoin_pairs(x: jax.Array, eps: float) -> np.ndarray:
+    """Dense O(N²) ε-join pair oracle: int32[P, 2] rows (i, j) with i > j,
+    lexicographically sorted.  Host-side (data-dependent output size)."""
+    d2 = np.asarray(squared_distances(x, x))
+    hit = np.tril(d2 <= eps * eps, k=-1)
+    i, j = np.nonzero(hit)
+    out = np.column_stack([i, j]).astype(np.int32)
+    return out[np.lexsort((out[:, 1], out[:, 0]))]
+
+
 def floyd_warshall(d: jax.Array) -> jax.Array:
     """All-pairs shortest paths; d: (n, n) f32 with +inf for non-edges."""
 

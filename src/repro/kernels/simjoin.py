@@ -1,4 +1,4 @@
-"""ε-similarity-join kernel with FGF jump-over scheduling (paper §7, [20]).
+"""ε-similarity-join kernels with FGF jump-over scheduling (paper §7, [20]).
 
 The join enumerates unordered point pairs with ‖x_i − x_j‖ ≤ ε.  Only the
 lower-triangular (i_tile ≥ j_tile) half of the tile grid carries work —
@@ -13,12 +13,30 @@ hilbert_point_order` (d-dimensional ``hilbert_sort_key``) can pre-sort
 the *points* so ε-neighbours concentrate near the tile-grid diagonal
 (``hilbert_order=True`` in ops.py).
 
-Outputs are per-point neighbour counts.  The kernel writes *per-step*
-partial row/column sums (each output block written exactly once → safe
-under any schedule, no aliased-accumulator hazard); ops.py scatter-adds
-them onto the point axis.  A diagonal tile counts each unordered pair
-once via a strict i<j mask; an off-diagonal tile contributes row sums to
-the i side and column sums to the j side.
+Two outputs, one hit predicate (:func:`_hit_tile`, shared so counts and
+emitted pairs can never disagree):
+
+* :func:`simjoin_tile_hits_swizzled` — per-step partial row/column hit
+  sums (each output block written exactly once → safe under any
+  schedule); ops.py scatter-adds them onto the point axis for
+  ``simjoin_counts``, and their row-sum per step is the per-tile hit
+  total that drives pair emission.
+* :func:`simjoin_emit_swizzled` — the classic two-pass pair *emission*:
+  given per-tile exclusive offsets (prefix sum of pass-1 totals), each
+  grid step recomputes its hit tile, compacts the hit coordinates to the
+  front (stable argsort on the flattened mask → row-major in-tile order),
+  and masked-read-modify-writes a fixed-size window of the single
+  VMEM-resident (P_pad, 2) pair buffer at its offset.  Offsets partition
+  [0, P), so every row is validly written by exactly one step and the
+  masked tail writes preserve other steps' regions — order-free, in
+  FGF-Hilbert tile order.  The buffer must fit in VMEM (P_pad · 2 int32);
+  the last-dim-2 layout is interpret-validated (a TPU lowering would
+  lane-pad it).
+
+A diagonal tile counts each unordered pair once via a strict i<j mask; an
+off-diagonal (i_tile > j_tile) tile contributes row sums to the i side
+and column sums to the j side, and emits (global_i, global_j) with
+global_i > global_j always.
 """
 from __future__ import annotations
 
@@ -32,13 +50,15 @@ from jax.experimental.pallas import tpu as pltpu
 from .pallas_compat import CompilerParams
 
 
-def _join_kernel(
-    sched_ref, xi_ref, xj_ref, hi_out, hj_out, *, eps2: float, n_valid: int | None
-):
-    s = pl.program_id(0)
-    diag = sched_ref[s, 0] == sched_ref[s, 1]
-    xi = xi_ref[...].astype(jnp.float32)  # (bp, d)
-    xj = xj_ref[...].astype(jnp.float32)  # (bp, d)
+def _hit_tile(xiv, xjv, ti, tj, *, eps2: float, n_valid: int | None):
+    """Boolean (bp, bp) hit mask of tile pair (ti, tj), pairs counted once.
+
+    Shared by the count and emit kernels — the single source of truth for
+    what an ε-hit is (threshold form, diagonal strictness, ragged-N
+    masking), so pass-1 totals always equal pass-2 emission counts.
+    """
+    xi = xiv.astype(jnp.float32)  # (bp, d)
+    xj = xjv.astype(jnp.float32)  # (bp, d)
     d2 = (
         jnp.sum(xi**2, axis=1)[:, None]
         - 2.0 * jnp.dot(xi, xj.T, preferred_element_type=jnp.float32)
@@ -47,21 +67,32 @@ def _join_kernel(
     hit = d2 <= eps2
     ii = jax.lax.broadcasted_iota(jnp.int32, hit.shape, 0)
     jj = jax.lax.broadcasted_iota(jnp.int32, hit.shape, 1)
-    hit = jnp.logical_and(hit, jnp.where(diag, ii > jj, True))
+    hit = jnp.logical_and(hit, jnp.where(ti == tj, ii > jj, True))
     if n_valid is not None:
         # ragged N: the pad rows are plain zeros (which WOULD ε-join each
         # other — and huge magic values would overflow f32); mask them by
         # global point index instead of poisoning the coordinates
         bp = hit.shape[0]
-        gi = sched_ref[s, 0] * bp + ii
-        gj = sched_ref[s, 1] * bp + jj
+        gi = ti * bp + ii
+        gj = tj * bp + jj
         hit = jnp.logical_and(hit, (gi < n_valid) & (gj < n_valid))
+    return hit
+
+
+def _join_kernel(
+    sched_ref, xi_ref, xj_ref, hi_out, hj_out, *, eps2: float, n_valid: int | None
+):
+    s = pl.program_id(0)
+    hit = _hit_tile(
+        xi_ref[...], xj_ref[...], sched_ref[s, 0], sched_ref[s, 1],
+        eps2=eps2, n_valid=n_valid,
+    )
     hi_out[0] = jnp.sum(hit.astype(jnp.int32), axis=1)
     hj_out[0] = jnp.sum(hit.astype(jnp.int32), axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "bp", "n_valid", "interpret"))
-def simjoin_counts_swizzled(
+def simjoin_tile_hits_swizzled(
     schedule: jax.Array,
     x: jax.Array,
     *,
@@ -69,18 +100,16 @@ def simjoin_counts_swizzled(
     bp: int = 256,
     n_valid: int | None = None,
     interpret: bool = False,
-) -> jax.Array:
-    """Neighbour count per point for the ε-join over unordered pairs.
+) -> tuple[jax.Array, jax.Array]:
+    """Per-step partial hit sums: (row_hits, col_hits), each int32[steps, bp].
 
     schedule: int32[steps, 2] of lower-triangle (i_tile >= j_tile) tile
     pairs (any order; FGF-Hilbert by default via ops.py).
-    x: (N, D) with N % bp == 0.  Returns int32[N] counts (self excluded).
-    ``n_valid``: true point count when N carries zero padding; pad rows
-    are masked out of the join by index.
+    x: (N, D) with N % bp == 0.  ``row_hits[s].sum()`` is the number of
+    unordered pairs found in step ``s``'s tile — pass 1 of pair emission.
     """
     N, D = x.shape
     assert N % bp == 0
-    pt = N // bp
     steps = schedule.shape[0]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -95,7 +124,7 @@ def simjoin_counts_swizzled(
             pl.BlockSpec((1, bp), lambda s, sr: (s, 0)),
         ],
     )
-    hits_i, hits_j = pl.pallas_call(
+    return pl.pallas_call(
         functools.partial(_join_kernel, eps2=float(eps) ** 2, n_valid=n_valid),
         grid_spec=grid_spec,
         out_shape=[
@@ -108,7 +137,108 @@ def simjoin_counts_swizzled(
         interpret=interpret,
     )(schedule, x, x)
 
+
+@functools.partial(jax.jit, static_argnames=("eps", "bp", "n_valid", "interpret"))
+def simjoin_counts_swizzled(
+    schedule: jax.Array,
+    x: jax.Array,
+    *,
+    eps: float,
+    bp: int = 256,
+    n_valid: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Neighbour count per point for the ε-join over unordered pairs.
+
+    Scatter-adds the per-step partials of
+    :func:`simjoin_tile_hits_swizzled` onto the point axis.  Returns
+    int32[N] counts (self excluded).
+    """
+    N, D = x.shape
+    pt = N // bp
+    hits_i, hits_j = simjoin_tile_hits_swizzled(
+        schedule, x, eps=eps, bp=bp, n_valid=n_valid, interpret=interpret
+    )
     counts = jnp.zeros((pt, bp), dtype=jnp.int32)
     counts = counts.at[schedule[:, 0]].add(hits_i)
     counts = counts.at[schedule[:, 1]].add(hits_j)
     return counts.reshape(N)
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: pair emission at prefetched per-tile offsets
+# ---------------------------------------------------------------------------
+
+def _emit_kernel(
+    sched_ref, xi_ref, xj_ref, o_ref, *, eps2: float, n_valid: int | None,
+    cap: int, bp: int,
+):
+    s = pl.program_id(0)
+    ti = sched_ref[s, 0]
+    tj = sched_ref[s, 1]
+    off = sched_ref[s, 2]
+    tot = sched_ref[s, 3]
+    hit = _hit_tile(xi_ref[...], xj_ref[...], ti, tj, eps2=eps2, n_valid=n_valid)
+    # compact hit coordinates to the front: stable sort on the flattened
+    # miss mask keeps hits first, in row-major in-tile order
+    lin = jnp.where(hit.reshape(-1), 0, 1).astype(jnp.int32)
+    idx = jnp.argsort(lin, stable=True)[:cap].astype(jnp.int32)
+    gi = ti * bp + idx // bp
+    gj = tj * bp + idx % bp
+    pairs = jnp.stack([gi, gj], axis=1)  # (cap, 2)
+    valid = jax.lax.broadcasted_iota(jnp.int32, (cap, 2), 0) < tot
+    # masked RMW of this tile's window of the resident pair buffer: rows
+    # past `tot` belong to other steps (offsets partition [0, P)) and are
+    # written back unchanged
+    window = o_ref[pl.ds(off, cap), :]
+    o_ref[pl.ds(off, cap), :] = jnp.where(valid, pairs, window)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps", "bp", "cap", "p_pad", "n_valid", "interpret")
+)
+def simjoin_emit_swizzled(
+    table: jax.Array,
+    x: jax.Array,
+    *,
+    eps: float,
+    bp: int,
+    cap: int,
+    p_pad: int,
+    n_valid: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Emit the ε-join's (i, j) index pairs, i > j, into a (p_pad, 2) buffer.
+
+    table: int32[steps, 4] rows ``(i_tile, j_tile, offset, total)`` where
+    ``offset`` is the exclusive prefix sum of the pass-1 per-tile totals
+    and ``cap`` a static per-tile capacity >= max total (ops.py derives
+    both from :func:`simjoin_tile_hits_swizzled`).  Rows [0, sum(total))
+    of the result are the pairs in schedule-then-row-major order; the
+    tail is garbage to slice off.  ``p_pad`` must be >= sum(total) + cap
+    so every step's window is in bounds.
+    """
+    N, D = x.shape
+    assert N % bp == 0 and cap <= bp * bp and p_pad >= cap
+    steps = table.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 0], 0)),
+            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 1], 0)),
+        ],
+        out_specs=pl.BlockSpec((p_pad, 2), lambda s, sr: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _emit_kernel, eps2=float(eps) ** 2, n_valid=n_valid, cap=cap, bp=bp
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p_pad, 2), jnp.int32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(table, x, x)

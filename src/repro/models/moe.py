@@ -22,6 +22,13 @@ from jax.sharding import PartitionSpec as P
 from .config import ModelConfig
 from .layers import dense_init, matrix_spec
 
+# jax >= 0.5 exports shard_map at top level; 0.4.x only has the
+# experimental module (jax.shard_map raises AttributeError there, so the
+# getattr default — not a try/except around the attribute — is required)
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def init_moe(key, cfg: ModelConfig, dtype):
     d, E, f = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
@@ -57,6 +64,26 @@ def specs_moe(cfg: ModelConfig):
     return s
 
 
+def _router_aux(xt, router_w, cfg: ModelConfig):
+    """Switch-style load-balance loss over the FULL expert set.
+
+    Computed from the replicated router weights alone, so it lives
+    OUTSIDE the shard_map in the EP path: the EP aux is then exactly the
+    dense-path aux (one global token mean, not a pmean of per-shard
+    estimates — the mean-of-products aux is nonlinear in the token mean),
+    and the shard_map body has no reduction whose transpose would choke
+    on the symbolic-zero cotangent aux gets whenever a loss uses only the
+    block output (jax 0.4.x ``pmean(Zero)`` transpose failure).
+    """
+    E = cfg.num_experts
+    logits = xt.astype(jnp.float32) @ router_w  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_e = jax.lax.top_k(probs, cfg.top_k)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    return E * jnp.sum(me * ce)
+
+
 def _dispatch_compute_combine(
     xt, router_w, w_gate, w_up, w_down, cfg: ModelConfig, e_offset, E_local: int
 ):
@@ -66,7 +93,7 @@ def _dispatch_compute_combine(
     dispatch/GEMM/combine touch only the local experts — tokens routed
     elsewhere contribute zero here and are summed in by the model-axis
     psum of the EP wrapper.  With e_offset=0, E_local=E this is the plain
-    single-device forward.  Returns (out (T,d) f32, aux f32)."""
+    single-device forward.  Returns out (T, d) f32."""
     T, d = xt.shape
     E, k = cfg.num_experts, cfg.top_k
 
@@ -74,11 +101,6 @@ def _dispatch_compute_combine(
     probs = jax.nn.softmax(logits, axis=-1)
     top_w, top_e = jax.lax.top_k(probs, k)  # (T, k)
     top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)  # renormalise
-
-    # aux loss (Switch-style load balancing; full expert set)
-    me = jnp.mean(probs, axis=0)
-    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
-    aux = E * jnp.sum(me * ce)
 
     # ---- sort-based dispatch over the local experts ----------------------
     cap = int(np.ceil(T * k / E * cfg.capacity_factor / 8.0) * 8)
@@ -110,7 +132,7 @@ def _dispatch_compute_combine(
     contrib = y_flat[slot] * (w_flat[order] * keep)[:, None].astype(y.dtype)
     out = jnp.zeros((T, d), dtype=jnp.float32)
     out = out.at[tok_flat[order]].add(contrib.astype(jnp.float32))
-    return out, aux
+    return out
 
 
 def moe_forward(params, x, cfg: ModelConfig):
@@ -138,8 +160,9 @@ def moe_forward(params, x, cfg: ModelConfig):
         and E % dict(zip(mesh.axis_names, mesh.devices.shape))["model"] == 0
     )
 
+    aux = _router_aux(x.reshape(B * S, d), params["router"], cfg)
     if not use_ep:
-        out, aux = _dispatch_compute_combine(
+        out = _dispatch_compute_combine(
             x.reshape(B * S, d), params["router"], params["w_gate"],
             params["w_up"], params["w_down"], cfg, 0, E,
         )
@@ -154,17 +177,14 @@ def moe_forward(params, x, cfg: ModelConfig):
         def body(xl, router_w, w_gate, w_up, w_down):
             Bl = xl.shape[0]
             rank = jax.lax.axis_index("model")
-            out, aux = _dispatch_compute_combine(
+            out = _dispatch_compute_combine(
                 xl.reshape(-1, d), router_w, w_gate, w_up, w_down,
                 cfg, rank * E_local, E_local,
             )
             out = jax.lax.psum(out.astype(x.dtype), "model")
-            # aux is model-invariant (same tokens per rank); mean over dp
-            if dp_nomodel:
-                aux = jax.lax.pmean(aux, dp_nomodel)
-            return out.reshape(Bl, -1, d), aux
+            return out.reshape(Bl, -1, d)
 
-        out_bsd, aux = jax.shard_map(
+        out_bsd = _shard_map(
             body,
             mesh=mesh,
             in_specs=(
@@ -174,7 +194,7 @@ def moe_forward(params, x, cfg: ModelConfig):
                 P("model", None, None),
                 P("model", None, None),
             ),
-            out_specs=(x_spec, P()),
+            out_specs=x_spec,
         )(x, params["router"], params["w_gate"], params["w_up"],
           params["w_down"])
         out = out_bsd.reshape(B * S, d).astype(jnp.float32)

@@ -1,0 +1,149 @@
+"""Ragged / degenerate inputs for the data-mining apps (PR 4 satellite):
+N < bp, K < bc, N == 1, k == 1, constant feature axes in the Hilbert
+point order, ε = 0 — each against the dense reference in interpret mode,
+with fused == multi-dispatch reference bit-identical throughout.  Plus
+the hoisted-permutation cache behaviour.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.kmeans import (
+    _cached_order,
+    hilbert_point_order,
+    hilbert_point_order_cached,
+)
+
+RNG = np.random.default_rng(2024)
+
+
+def sorted_pairs(p) -> np.ndarray:
+    p = np.asarray(p)
+    if len(p) == 0:
+        return p.reshape(0, 2)
+    return p[np.lexsort((p[:, 1], p[:, 0]))]
+
+
+def assert_lloyd_fused_eq_reference(x, k, **kw):
+    cf, af = ops.kmeans_lloyd(x, k, fused=True, interpret=True, **kw)
+    cr, ar = ops.kmeans_lloyd(x, k, fused=False, interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cr))
+    np.testing.assert_array_equal(np.asarray(af), np.asarray(ar))
+    return cf, af
+
+
+class TestKmeansRagged:
+    def test_n_smaller_than_bp(self):
+        # N=10 with bp=8 pads the point axis; pad rows must not count
+        x = jnp.asarray(RNG.normal(size=(10, 3)), jnp.float32)
+        c, a = assert_lloyd_fused_eq_reference(x, 3, iters=3, bp=8, bc=2)
+        c_prev, _ = ops.kmeans_lloyd(x, 3, iters=2, bp=8, bc=2, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(ref.kmeans_assign(x, c_prev)[1]))
+        # padding choice is invisible: same result with no padding needed
+        c2, a2 = ops.kmeans_lloyd(x, 3, iters=3, bp=10, bc=2, interpret=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(a2))
+
+    def test_k_smaller_than_bc(self):
+        # k=3 with bc=8 clamps to bc=3; k=5, bc=4 pads the centroid axis
+        x = jnp.asarray(RNG.normal(size=(64, 4)), jnp.float32)
+        assert_lloyd_fused_eq_reference(x, 3, iters=2, bp=16, bc=8)
+        c, a = assert_lloyd_fused_eq_reference(x, 5, iters=2, bp=16, bc=4)
+        assert np.isfinite(np.asarray(c)).all()
+        assert int(np.asarray(a).max()) < 5  # pad centroids never win
+
+    def test_n_equals_1(self):
+        x = jnp.asarray(RNG.normal(size=(1, 4)), jnp.float32)
+        c, a = assert_lloyd_fused_eq_reference(x, 1, iters=2)
+        np.testing.assert_array_equal(np.asarray(a), [0])
+        np.testing.assert_allclose(np.asarray(c), np.asarray(x), rtol=1e-6)
+
+    def test_k_equals_1(self):
+        x = jnp.asarray(RNG.normal(size=(33, 2)), jnp.float32)
+        c, a = assert_lloyd_fused_eq_reference(x, 1, iters=2, bp=8)
+        np.testing.assert_array_equal(np.asarray(a), np.zeros(33))
+        np.testing.assert_allclose(
+            np.asarray(c)[0], np.asarray(x).mean(axis=0), rtol=1e-5)
+
+    def test_constant_feature_axis(self):
+        # hi == lo on every quantised axis: the min-max scale must not
+        # divide by zero; all keys equal -> stable argsort is identity
+        xc = jnp.asarray(np.full((24, 3), 2.5, np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(hilbert_point_order(xc)), np.arange(24))
+        # one constant axis among varying ones still works end to end
+        x = jnp.asarray(
+            np.column_stack([np.full(40, 1.0), RNG.normal(size=(40, 2))]),
+            jnp.float32)
+        assert_lloyd_fused_eq_reference(
+            x, 4, iters=2, bp=16, bc=2, hilbert_order=True)
+
+
+class TestSimjoinRagged:
+    def test_n_smaller_than_bp(self):
+        x = jnp.asarray(RNG.normal(size=(7, 2)) * 0.5, jnp.float32)
+        got = sorted_pairs(ops.simjoin_pairs(x, eps=1.0, bp=16, interpret=True))
+        np.testing.assert_array_equal(got, ref.simjoin_pairs(x, 1.0))
+
+    def test_n_equals_1(self):
+        x = jnp.asarray(RNG.normal(size=(1, 3)), jnp.float32)
+        assert ops.simjoin_pairs(x, eps=5.0, interpret=True).shape == (0, 2)
+        np.testing.assert_array_equal(
+            np.asarray(ops.simjoin_counts(x, eps=5.0, interpret=True)), [0])
+
+    def test_n_equals_0(self):
+        x = jnp.zeros((0, 4), jnp.float32)
+        assert ops.simjoin_pairs(x, eps=1.0, interpret=True).shape == (0, 2)
+        assert ops.simjoin_counts(x, eps=1.0, interpret=True).shape == (0,)
+
+    def test_eps_zero_exact_duplicates(self):
+        # integer coordinates make the quadratic-form distance exact, so
+        # ε=0 joins exactly the duplicate pairs (and nothing else)
+        x = jnp.asarray(
+            np.array([[1, 2], [3, 4], [1, 2], [5, 6], [3, 4], [1, 2]],
+                     np.float32))
+        got = sorted_pairs(ops.simjoin_pairs(x, eps=0.0, bp=4, interpret=True))
+        want = ref.simjoin_pairs(x, 0.0)
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(want, [[2, 0], [4, 1], [5, 0], [5, 2]])
+        counts = np.asarray(ops.simjoin_counts(x, eps=0.0, bp=4, interpret=True))
+        np.testing.assert_array_equal(counts, [2, 1, 2, 0, 1, 2])
+
+    def test_ragged_with_hilbert_order(self):
+        x = jnp.asarray(RNG.normal(size=(45, 3)) * 0.6, jnp.float32)
+        got = sorted_pairs(ops.simjoin_pairs(
+            x, eps=0.9, bp=16, hilbert_order=True, interpret=True))
+        np.testing.assert_array_equal(got, ref.simjoin_pairs(x, 0.9))
+
+
+class TestPointOrderCache:
+    def test_cache_hits_on_same_grid(self):
+        x = jnp.asarray(RNG.normal(size=(100, 3)), jnp.float32)
+        _cached_order.cache_clear()
+        p1 = hilbert_point_order_cached(x)
+        info1 = _cached_order.cache_info()
+        p2 = hilbert_point_order_cached(x)
+        info2 = _cached_order.cache_info()
+        assert info1.misses == 1 and info2.hits == info1.hits + 1
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+        np.testing.assert_array_equal(
+            np.asarray(p1), np.asarray(hilbert_point_order(x)))
+
+    def test_lloyd_hoists_permutation(self):
+        # the Lloyd loop must compute the Hilbert permutation once, not
+        # once per iteration (the pre-PR-4 repeated-work bug)
+        x = jnp.asarray(RNG.normal(size=(64, 3)), jnp.float32)
+        _cached_order.cache_clear()
+        ops.kmeans_lloyd(x, 4, iters=5, bp=16, bc=2, hilbert_order=True,
+                         interpret=True)
+        assert _cached_order.cache_info().misses == 1
+
+    def test_repeated_joins_hit_cache(self):
+        x = jnp.asarray(RNG.normal(size=(64, 3)), jnp.float32)
+        _cached_order.cache_clear()
+        ops.simjoin_counts(x, eps=0.5, bp=16, hilbert_order=True, interpret=True)
+        ops.simjoin_counts(x, eps=0.9, bp=16, hilbert_order=True, interpret=True)
+        ops.simjoin_pairs(x, eps=0.9, bp=16, hilbert_order=True, interpret=True)
+        info = _cached_order.cache_info()
+        assert info.misses == 1 and info.hits >= 2

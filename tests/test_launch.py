@@ -10,6 +10,10 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+# >100 s on CPU (the tinyllama production-mesh compile alone runs minutes);
+# tier-1 runs `-m "not slow"`, CI still runs everything
+pytestmark = pytest.mark.slow
+
 
 class TestResolveSpec:
     def _mesh(self):

@@ -8,6 +8,10 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, applicable_shapes, get_config, get_reduced, skip_reason
+
+# ~100 s of per-arch grad compiles on CPU; tier-1 runs `-m "not slow"`,
+# CI still runs everything
+pytestmark = pytest.mark.slow
 from repro.models import (
     cache_specs,
     count_params,

@@ -5,6 +5,12 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# ~8 min of 8-device jit+grad compile on CPU; tier-1 runs `-m "not slow"`,
+# CI still runs everything
+pytestmark = pytest.mark.slow
+
 _CODE = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
