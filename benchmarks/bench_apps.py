@@ -225,4 +225,49 @@ def run() -> list[dict]:
         "derived": f"ms warm; {len(got)} pairs; dispatches {nd_p} "
                    f"(count+emit); bit_identical={bit}",
     })
+
+    # --- sharded apps: curve-range shard_map over simulated devices --------
+    # rows appear for every mesh size the process can simulate (CI's
+    # sharded job and the committed BENCH_curves.json run under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 → 1/2/8).
+    from repro.kernels.sharded import kmeans_sharded_collectives
+    from repro.launch.mesh import make_app_mesh
+
+    sizes = [s for s in (1, 2, 8) if s <= len(jax.devices())]
+    xs = jnp.asarray(rng.normal(size=(512, 8)), jnp.float32)
+    skm_kw = dict(iters=2, curve="hilbert", bp=64, bc=8, interpret=True)
+    (c1, a1), warm_1 = _timed_best(
+        lambda: ops.kmeans_lloyd(xs, 16, fused=True, **skm_kw))
+    for s in sizes:
+        mesh = make_app_mesh(s)
+        (c2, a2), warm_s = _timed_best(
+            lambda: ops.kmeans_lloyd(xs, 16, mesh=mesh, **skm_kw))
+        bit = bool(
+            (np.asarray(c1) == np.asarray(c2)).all()
+            and (np.asarray(a1) == np.asarray(a2)).all()
+        )
+        coll = kmeans_sharded_collectives(xs, 16, mesh=mesh, **skm_kw)
+        coll_s = "+".join(f"{v}x{k}" for k, v in sorted(coll.items()))
+        rows.append({
+            "bench": "apps_sharded", "name": f"kmeans_mesh{s}",
+            "value": round(warm_s * 1e3, 1),
+            "derived": f"ms warm (single-core {warm_1 * 1e3:.1f}); "
+                       f"collectives/iter {coll_s}; bit_identical={bit}",
+        })
+
+    xjs = jnp.asarray(rng.normal(size=(384, 4)) * 0.6, jnp.float32)
+    sj_kw = dict(eps=0.8, bp=64, interpret=True)
+    pj1, warm_j1 = _timed_best(lambda: ops.simjoin_pairs(xjs, **sj_kw))
+    for s in sizes:
+        mesh = make_app_mesh(s)
+        pj2, warm_js = _timed_best(
+            lambda: ops.simjoin_pairs(xjs, mesh=mesh, **sj_kw))
+        bit = bool(np.array_equal(np.asarray(pj1), np.asarray(pj2)))
+        rows.append({
+            "bench": "apps_sharded", "name": f"simjoin_mesh{s}",
+            "value": round(warm_js * 1e3, 1),
+            "derived": f"ms warm (single-core {warm_j1 * 1e3:.1f}); "
+                       f"{len(np.asarray(pj2))} pairs; collectives 0 "
+                       f"(host-sync two-pass); bit_identical={bit}",
+        })
     return rows

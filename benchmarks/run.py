@@ -70,9 +70,22 @@ def main() -> None:
             print(f"# refusing to write {json_path}: 0 rows collected",
                   file=sys.stderr)
             sys.exit(1)
+        # stable top-level summary so BENCH_*.json snapshots diff cleanly
+        # across PRs: schema version, sorted suite names, per-suite row
+        # counts.  "rows" stays the flat list earlier tooling reads.
+        row_counts: dict[str, int] = {}
+        for row in collected:
+            row_counts[row["bench"]] = row_counts.get(row["bench"], 0) + 1
+        summary = {
+            "schema_version": 2,
+            "suites": sorted(row_counts),
+            "row_counts": {k: row_counts[k] for k in sorted(row_counts)},
+            "total_rows": len(collected),
+        }
         with open(json_path, "w") as f:
-            json.dump({"rows": collected}, f, indent=1)
-        print(f"# wrote {json_path} ({len(collected)} rows)", file=sys.stderr)
+            json.dump({"summary": summary, "rows": collected}, f, indent=1)
+        print(f"# wrote {json_path} ({len(collected)} rows, "
+              f"{len(row_counts)} suites)", file=sys.stderr)
     print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
 
 

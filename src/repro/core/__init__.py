@@ -12,6 +12,8 @@ Modules:
   fgf_nd        d-dimensional jump-over walker              (beyond-paper)
   curve         SpaceFillingCurve abstraction + registry    (beyond-paper)
   schedule      tile-schedule factory + traffic models      (TPU adaptation)
+  program       CurveProgram declarations + VMEM budget +
+                curve-range partitioning                    (execution layer)
   jax_hilbert   device-side vectorised codec                (TPU adaptation)
 """
 from .curve import (
@@ -92,6 +94,14 @@ from .lindenmayer import (
     lindenmayer_nonrecursive,
 )
 from .peano import peano_decode, peano_encode, peano_path
+from .program import (
+    CurveProgram,
+    VMEM_BUDGET_DEFAULT,
+    curve_partition,
+    fits_vmem,
+    get_vmem_budget,
+    set_vmem_budget,
+)
 from .schedule import (
     CHOLESKY_PHASES,
     CURVES,
@@ -112,6 +122,7 @@ from .schedule import (
     phase_barriers,
     phased_schedule,
     phased_schedule_device,
+    register_schedule_cache,
     reuse_distances,
     schedule_cache_clear,
     schedule_hilbert_values,

@@ -192,14 +192,29 @@ def _device_schedule(
     return jnp.asarray(sched, dtype=jnp.int32)
 
 
+# Every schedule/device LRU in the project registers itself here, so
+# schedule_cache_clear() cannot silently miss caches added by later PRs
+# (the PR-4 bug: hilbert_point_order_cached leaked across tests that
+# re-registered curves).  A cache is anything with a .cache_clear().
+_REGISTERED_CACHES: list = []
+
+
+def register_schedule_cache(cache):
+    """Register an LRU (anything with ``cache_clear()``) to be dropped by
+    :func:`schedule_cache_clear`.  Returns the cache, so it composes as
+    ``fn = register_schedule_cache(functools.lru_cache(...)(fn))``."""
+    if not callable(getattr(cache, "cache_clear", None)):
+        raise TypeError(f"{cache!r} has no cache_clear()")
+    _REGISTERED_CACHES.append(cache)
+    return cache
+
+
 def schedule_cache_clear() -> None:
-    """Drop all cached schedules (host + device)."""
-    _cached_path.cache_clear()
-    _device_schedule.cache_clear()
-    _phased_schedule_host.cache_clear()
-    _phased_schedule_dev.cache_clear()
-    _kmeans_schedule_host.cache_clear()
-    _kmeans_schedule_dev.cache_clear()
+    """Drop ALL cached schedule/device tables — the built-ins here plus
+    every cache registered via :func:`register_schedule_cache` (fused-app
+    schedules, point-order permutations, shard_map program builders)."""
+    for cache in _REGISTERED_CACHES:
+        cache.cache_clear()
 
 
 def triangle_schedule_nd(
@@ -669,3 +684,16 @@ def miss_curve(
     Single-pass: reuse-distance histogram + suffix sum, not one LRU
     simulation per size (see :func:`miss_counts`)."""
     return miss_counts(list(pair_stream(sched)), [int(s) for s in cache_sizes])
+
+
+# this module's own LRUs (downstream modules register theirs at import)
+for _cache in (
+    _cached_path,
+    _device_schedule,
+    _phased_schedule_host,
+    _phased_schedule_dev,
+    _kmeans_schedule_host,
+    _kmeans_schedule_dev,
+):
+    register_schedule_cache(_cache)
+del _cache

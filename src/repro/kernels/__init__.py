@@ -1,28 +1,43 @@
 """repro.kernels — Pallas TPU kernels for the paper's applications.
 
-Each kernel follows the project convention: <name>.py holds the
-pl.pallas_call + BlockSpec tiling, ops.py the public jit'd wrappers
-(padding, schedule choice, interpret dispatch), ref.py the pure-jnp
-oracles.  All kernels take their (i, j) tile order from a scalar-prefetch
-schedule table built by :mod:`repro.core.schedule` — that table IS the
-paper's contribution (Hilbert/FUR/FGF iteration order) in TPU form.
+Each kernel follows the project convention: <name>.py holds the tile
+math plus a :class:`repro.core.CurveProgram` declaration, launch.py the
+single ``pallas_call`` dispatcher every program goes through, ops.py
+the public jit'd wrappers (padding, schedule choice, VMEM-budget
+fallback, interpret dispatch), sharded.py the curve-range shard_map
+scale-out, and ref.py the pure-jnp oracles.  All kernels take their
+(i, j) tile order from a scalar-prefetch schedule table built by
+:mod:`repro.core.schedule` — that table IS the paper's contribution
+(Hilbert/FUR/FGF iteration order) in TPU form.
 """
 from . import ops, ref
 from .attention import causal_schedule, flash_attention_swizzled, full_schedule
-from .cholesky import cholesky_blocked, cholesky_blocked_reference
+from .cholesky import cholesky_blocked, cholesky_blocked_reference, cholesky_program
 from .floyd_warshall import (
     floyd_warshall_blocked,
     floyd_warshall_blocked_reference,
+    fw_program,
 )
 from .kmeans import (
     kmeans_assign_swizzled,
+    kmeans_init,
     kmeans_lloyd_fused,
+    kmeans_lloyd_program,
     kmeans_lloyd_reference,
+    kmeans_shard_program,
 )
+from .launch import PallasCallCounter, count_collectives, launch
 from .matmul import matmul_swizzled, tile_update_swizzled
+from .sharded import (
+    kmeans_lloyd_sharded,
+    kmeans_sharded_collectives,
+    simjoin_pairs_sharded,
+)
 from .simjoin import (
     simjoin_counts_swizzled,
+    simjoin_emit_program,
     simjoin_emit_swizzled,
+    simjoin_hits_program,
     simjoin_tile_hits_swizzled,
 )
 
@@ -30,18 +45,31 @@ __all__ = [
     "ops",
     "ref",
     "causal_schedule",
+    "count_collectives",
     "full_schedule",
     "flash_attention_swizzled",
     "cholesky_blocked",
     "cholesky_blocked_reference",
+    "cholesky_program",
     "floyd_warshall_blocked",
     "floyd_warshall_blocked_reference",
+    "fw_program",
     "kmeans_assign_swizzled",
+    "kmeans_init",
     "kmeans_lloyd_fused",
+    "kmeans_lloyd_program",
     "kmeans_lloyd_reference",
+    "kmeans_lloyd_sharded",
+    "kmeans_shard_program",
+    "kmeans_sharded_collectives",
+    "launch",
     "matmul_swizzled",
-    "tile_update_swizzled",
+    "PallasCallCounter",
     "simjoin_counts_swizzled",
+    "simjoin_emit_program",
     "simjoin_emit_swizzled",
+    "simjoin_hits_program",
+    "simjoin_pairs_sharded",
     "simjoin_tile_hits_swizzled",
+    "tile_update_swizzled",
 ]

@@ -41,8 +41,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .pallas_compat import CompilerParams
 
-from repro.core import phased_schedule, phased_schedule_device
+from repro.core import CHOLESKY_PHASES, phased_schedule, phased_schedule_device
+from repro.core.program import CurveProgram
 
+from .launch import launch
 from .matmul import tile_update_swizzled
 
 
@@ -137,41 +139,47 @@ def _fused_chol_kernel(sched_ref, a_in_ref, o_ref, diag_ref, panel_ref, *, b):
         )
 
 
+def cholesky_program(curve: str, nt: int, b: int) -> CurveProgram:
+    """The fused-Cholesky declaration: L_kk plus the finished L_*k panel
+    carried in VMEM scratch (``b·b + b·n`` f32 — the residency the ops
+    wrapper gates on), every matrix access through the aliased output
+    ref, trailing SYRK tiles in FGF-Hilbert triangle order."""
+    n = nt * b
+    return CurveProgram(
+        name=f"cholesky_fused_{curve}",
+        schedule=phased_schedule_device(curve, nt, kind="cholesky"),
+        kernel=functools.partial(_fused_chol_kernel, b=b),
+        in_specs=(pl.BlockSpec((b, b), lambda s, sr: (sr[s, 2], sr[s, 3])),),
+        out_specs=pl.BlockSpec((b, b), lambda s, sr: (sr[s, 2], sr[s, 3])),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        scratch_shapes=(
+            pltpu.VMEM((b, b), jnp.float32),   # L_kk
+            pltpu.VMEM((n, b), jnp.float32),   # L_*k panel (absolute tiles)
+        ),
+        input_output_aliases={1: 0},
+        phases=CHOLESKY_PHASES,
+        columns=("phase", "k", "i", "j", "first_visit"),
+        reference=lambda a, **kw: cholesky_blocked_reference(a, **kw),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("b", "curve", "interpret"))
 def cholesky_blocked(
     a: jax.Array, *, b: int = 128, curve: str = "hilbert", interpret: bool = False
 ) -> jax.Array:
     """Lower Cholesky factor; a: (n, n) SPD f32, n % b == 0.
 
-    Single fused ``pallas_call``: grid = total phased-schedule steps
-    across all k-blocks (diag/panel/trailing), in-place aliased updates.
-    Bit-identical (interpret f32) to :func:`cholesky_blocked_reference`.
+    One :func:`repro.kernels.launch.launch` of :func:`cholesky_program`:
+    grid = total phased-schedule steps across all k-blocks
+    (diag/panel/trailing), in-place aliased updates.  Bit-identical
+    (interpret f32) to :func:`cholesky_blocked_reference`.
     """
     n = a.shape[0]
     assert a.shape == (n, n) and n % b == 0
-    nt = n // b
-    a = a.astype(jnp.float32)
-
-    steps = len(phased_schedule(curve, nt, kind="cholesky"))
-    sched = phased_schedule_device(curve, nt, kind="cholesky")
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(steps,),
-        in_specs=[pl.BlockSpec((b, b), lambda s, sr: (sr[s, 2], sr[s, 3]))],
-        out_specs=pl.BlockSpec((b, b), lambda s, sr: (sr[s, 2], sr[s, 3])),
-        scratch_shapes=[
-            pltpu.VMEM((b, b), jnp.float32),   # L_kk
-            pltpu.VMEM((n, b), jnp.float32),   # L_*k panel (absolute tiles)
-        ],
-    )
-    out = pl.pallas_call(
-        functools.partial(_fused_chol_kernel, b=b),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
-        input_output_aliases={1: 0},
-        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+    out = launch(
+        cholesky_program(curve, n // b, b), a.astype(jnp.float32),
         interpret=interpret,
-    )(sched, a)
+    )
     return jnp.tril(out)
 
 

@@ -50,7 +50,15 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .pallas_compat import CompilerParams
 
-from repro.core import phased_schedule, phased_schedule_device, tile_schedule
+from repro.core import (
+    FW_PHASES,
+    phased_schedule,
+    phased_schedule_device,
+    tile_schedule,
+)
+from repro.core.program import CurveProgram
+
+from .launch import launch
 
 _CHUNK = 8
 
@@ -146,43 +154,51 @@ def _fused_fw_kernel(sched_ref, d_in_ref, o_ref, diag_ref, row_ref, col_ref, *, 
         o_ref[...] = jnp.minimum(d, _minplus(dik, dkj)).astype(o_ref.dtype)
 
 
+def fw_program(curve: str, nt: int, b: int) -> CurveProgram:
+    """The fused-FW declaration: one grid step per phased-schedule row,
+    per-k state (closed diagonal + finished row/column panels) in VMEM
+    scratch, all RMW through the aliased output ref.  The VMEM bound of
+    the fused form — ``b·b + 2·b·n`` f32 scratch on top of the streamed
+    (b, b) blocks — is what :meth:`CurveProgram.vmem_bytes` reports and
+    the ops wrapper gates on."""
+    n = nt * b
+    return CurveProgram(
+        name=f"fw_fused_{curve}",
+        schedule=phased_schedule_device(curve, nt, kind="fw"),
+        kernel=functools.partial(_fused_fw_kernel, b=b),
+        in_specs=(pl.BlockSpec((b, b), lambda s, sr: (sr[s, 2], sr[s, 3])),),
+        out_specs=pl.BlockSpec((b, b), lambda s, sr: (sr[s, 2], sr[s, 3])),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        scratch_shapes=(
+            pltpu.VMEM((b, b), jnp.float32),   # closed diagonal D_kk
+            pltpu.VMEM((b, n), jnp.float32),   # row panel D_k*
+            pltpu.VMEM((n, b), jnp.float32),   # column panel D_*k
+        ),
+        input_output_aliases={1: 0},
+        phases=FW_PHASES,
+        columns=("phase", "k", "i", "j", "first_visit"),
+        reference=lambda d, **kw: floyd_warshall_blocked_reference(d, **kw),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("b", "curve", "interpret"))
 def floyd_warshall_blocked(
     d: jax.Array, *, b: int = 128, curve: str = "hilbert", interpret: bool = False
 ) -> jax.Array:
     """All-pairs shortest paths; d: (n, n) f32, n % b == 0, b % 8 == 0.
 
-    Single fused ``pallas_call``: grid = total phased-schedule steps
-    across all k-blocks, scalar-prefetched ``(phase, k, i, j)`` table,
-    in-place aliased min-updates.  Bit-identical (interpret f32) to
+    One :func:`repro.kernels.launch.launch` of :func:`fw_program`:
+    grid = total phased-schedule steps across all k-blocks,
+    scalar-prefetched ``(phase, k, i, j)`` table, in-place aliased
+    min-updates.  Bit-identical (interpret f32) to
     :func:`floyd_warshall_blocked_reference`.
     """
     n = d.shape[0]
     assert d.shape == (n, n) and n % b == 0 and b % _CHUNK == 0
-    nt = n // b
-    d = d.astype(jnp.float32)
-
-    steps = len(phased_schedule(curve, nt, kind="fw"))
-    sched = phased_schedule_device(curve, nt, kind="fw")
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(steps,),
-        in_specs=[pl.BlockSpec((b, b), lambda s, sr: (sr[s, 2], sr[s, 3]))],
-        out_specs=pl.BlockSpec((b, b), lambda s, sr: (sr[s, 2], sr[s, 3])),
-        scratch_shapes=[
-            pltpu.VMEM((b, b), jnp.float32),   # closed diagonal D_kk
-            pltpu.VMEM((b, n), jnp.float32),   # row panel D_k*
-            pltpu.VMEM((n, b), jnp.float32),   # column panel D_*k
-        ],
-    )
-    return pl.pallas_call(
-        functools.partial(_fused_fw_kernel, b=b),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
-        input_output_aliases={1: 0},
-        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+    return launch(
+        fw_program(curve, n // b, b), d.astype(jnp.float32),
         interpret=interpret,
-    )(sched, d)
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("b", "curve", "interpret"))
@@ -256,21 +272,19 @@ def floyd_warshall_blocked_reference(
             continue
         d_col = jax.lax.dynamic_slice(d, (0, kb * b), (n, b))  # D_*k panel
         d_row = jax.lax.dynamic_slice(d, (kb * b, 0), (b, n))  # D_k* panel
-        d = pl.pallas_call(
-            _trailing_kernel,
-            grid_spec=pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=1,
-                grid=(len(sched),),
-                in_specs=[
-                    pl.BlockSpec((b, b), lambda s, sr: (sr[s, 0], 0)),
-                    pl.BlockSpec((b, b), lambda s, sr: (0, sr[s, 1])),
-                    pl.BlockSpec((b, b), lambda s, sr: (sr[s, 0], sr[s, 1])),
-                ],
-                out_specs=pl.BlockSpec((b, b), lambda s, sr: (sr[s, 0], sr[s, 1])),
+        trailing = CurveProgram(
+            name="fw_trailing",
+            schedule=jnp.asarray(sched, dtype=jnp.int32),
+            kernel=_trailing_kernel,
+            in_specs=(
+                pl.BlockSpec((b, b), lambda s, sr: (sr[s, 0], 0)),
+                pl.BlockSpec((b, b), lambda s, sr: (0, sr[s, 1])),
+                pl.BlockSpec((b, b), lambda s, sr: (sr[s, 0], sr[s, 1])),
             ),
+            out_specs=pl.BlockSpec((b, b), lambda s, sr: (sr[s, 0], sr[s, 1])),
             out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
             input_output_aliases={3: 0},
-            compiler_params=params,
-            interpret=interpret,
-        )(jnp.asarray(sched, dtype=jnp.int32), d_col, d_row, d)
+            columns=("i", "j"),
+        )
+        d = launch(trailing, d_col, d_row, d, interpret=interpret)
     return d

@@ -39,10 +39,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import hilbert_sort_key
-from .pallas_compat import CompilerParams
+from repro.core import hilbert_sort_key, register_schedule_cache
+from repro.core.program import CurveProgram
+
+from .launch import launch
 
 
 def _quantise_points(
@@ -116,7 +117,9 @@ class _OrderCache:
         return info(self.hits, self.misses, self.maxsize, len(self._store))
 
 
-_cached_order = _OrderCache()
+# registered so core.schedule_cache_clear() drops it too (it caches on
+# the quantised grid, which changes meaning when curves are re-registered)
+_cached_order = register_schedule_cache(_OrderCache())
 
 
 def hilbert_point_order_cached(
@@ -233,31 +236,26 @@ def kmeans_assign_swizzled(
 
     cnorm = jnp.sum(c.astype(jnp.float32) ** 2, axis=1)[None, :]  # (1, K)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(pt * ctn,),
-        in_specs=[
+    program = CurveProgram(
+        name="kmeans_assign",
+        schedule=schedule,
+        kernel=functools.partial(_assign_kernel, bc=bc, k_valid=k_valid),
+        in_specs=(
             pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 0], 0)),
             pl.BlockSpec((bc, D), lambda s, sr: (sr[s, 1], 0)),
             pl.BlockSpec((1, bc), lambda s, sr: (0, sr[s, 1])),
-        ],
+        ),
         out_specs=[
             pl.BlockSpec((1, 1, bp), lambda s, sr: (sr[s, 0], sr[s, 1], 0)),
             pl.BlockSpec((1, 1, bp), lambda s, sr: (sr[s, 0], sr[s, 1], 0)),
         ],
-    )
-    tile_min, tile_arg = pl.pallas_call(
-        functools.partial(_assign_kernel, bc=bc, k_valid=k_valid),
-        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((pt, ctn, bp), jnp.float32),
             jax.ShapeDtypeStruct((pt, ctn, bp), jnp.int32),
         ],
-        compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
-        interpret=interpret,
-    )(schedule, x, c, cnorm)
+        columns=("i", "j"),
+    )
+    tile_min, tile_arg = launch(program, x, c, cnorm, interpret=interpret)
 
     # O(N * ct) merge of the per-centroid-tile partials
     best_ct = jnp.argmin(tile_min, axis=1)  # (pt, bp)
@@ -330,6 +328,47 @@ def _fused_lloyd_kernel(
             cnt_ref[...] += part_cnt
 
 
+def kmeans_lloyd_program(
+    schedule, *, pt: int, ct: int, bp: int, bc: int, D: int,
+    k_valid: int | None, n_valid: int | None,
+) -> CurveProgram:
+    """The fused-Lloyd declaration (one iteration = one dispatch).
+
+    Streams (bp, D) point / (bc, D) centroid panels, RMWs the running
+    per-point-tile (min, argmin) blocks through the output refs, and
+    accumulates into a single resident (Kp, D) + (1, Kp) f32 block pair
+    — the ``K·D + K`` f32 residency the ops wrapper gates on.
+    """
+    Kp = ct * bc
+    return CurveProgram(
+        name="kmeans_lloyd_fused",
+        schedule=schedule,
+        kernel=functools.partial(
+            _fused_lloyd_kernel, bc=bc, Kp=Kp, k_valid=k_valid, n_valid=n_valid
+        ),
+        in_specs=(
+            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 1], 0)),
+            pl.BlockSpec((bc, D), lambda s, sr: (sr[s, 2], 0)),
+            pl.BlockSpec((1, bc), lambda s, sr: (0, sr[s, 2])),
+        ),
+        out_specs=[
+            pl.BlockSpec((1, bp), lambda s, sr: (sr[s, 1], 0)),
+            pl.BlockSpec((1, bp), lambda s, sr: (sr[s, 1], 0)),
+            pl.BlockSpec((Kp, D), lambda s, sr: (0, 0)),
+            pl.BlockSpec((1, Kp), lambda s, sr: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pt, bp), jnp.float32),
+            jax.ShapeDtypeStruct((pt, bp), jnp.int32),
+            jax.ShapeDtypeStruct((Kp, D), jnp.float32),
+            jax.ShapeDtypeStruct((1, Kp), jnp.float32),
+        ],
+        phases=("assign", "update"),
+        columns=("phase", "i", "j", "first_visit"),
+        reference=lambda *a, **kw: kmeans_lloyd_reference(*a, **kw),
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("iters", "bp", "bc", "k_valid", "n_valid", "interpret"),
@@ -362,39 +401,15 @@ def kmeans_lloyd_fused(
     steps = pt * ct + pt
     assert schedule.shape == (steps, 4), (schedule.shape, steps)
 
-    call = pl.pallas_call(
-        functools.partial(
-            _fused_lloyd_kernel, bc=bc, Kp=Kp, k_valid=k_valid, n_valid=n_valid
-        ),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(steps,),
-            in_specs=[
-                pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 1], 0)),
-                pl.BlockSpec((bc, D), lambda s, sr: (sr[s, 2], 0)),
-                pl.BlockSpec((1, bc), lambda s, sr: (0, sr[s, 2])),
-            ],
-            out_specs=[
-                pl.BlockSpec((1, bp), lambda s, sr: (sr[s, 1], 0)),
-                pl.BlockSpec((1, bp), lambda s, sr: (sr[s, 1], 0)),
-                pl.BlockSpec((Kp, D), lambda s, sr: (0, 0)),
-                pl.BlockSpec((1, Kp), lambda s, sr: (0, 0)),
-            ],
-        ),
-        out_shape=[
-            jax.ShapeDtypeStruct((pt, bp), jnp.float32),
-            jax.ShapeDtypeStruct((pt, bp), jnp.int32),
-            jax.ShapeDtypeStruct((Kp, D), jnp.float32),
-            jax.ShapeDtypeStruct((1, Kp), jnp.float32),
-        ],
-        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
-        interpret=interpret,
+    program = kmeans_lloyd_program(
+        schedule, pt=pt, ct=ct, bp=bp, bc=bc, D=D,
+        k_valid=k_valid, n_valid=n_valid,
     )
 
     def step(carry, _):
         c, _assign = carry
         cnorm = jnp.sum(c**2, axis=1)[None, :]  # (1, Kp)
-        _min_m, arg, sums, cnt = call(schedule, x, c, cnorm)
+        _min_m, arg, sums, cnt = launch(program, x, c, cnorm, interpret=interpret)
         cw = cnt[0][:, None]
         c_new = jnp.where(cw > 0, sums / jnp.maximum(cw, 1.0), c)
         return (c_new, arg.reshape(Np)), None
@@ -448,27 +463,25 @@ def kmeans_update_swizzled(
     assert Np % bp == 0
     pt = Np // bp
     assert schedule.shape == (pt, 2)
-    return pl.pallas_call(
-        functools.partial(_update_kernel, Kp=Kp, n_valid=n_valid),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(pt,),
-            in_specs=[
-                pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 0], 0)),
-                pl.BlockSpec((1, bp), lambda s, sr: (sr[s, 0], 0)),
-            ],
-            out_specs=[
-                pl.BlockSpec((Kp, D), lambda s, sr: (0, 0)),
-                pl.BlockSpec((1, Kp), lambda s, sr: (0, 0)),
-            ],
+    program = CurveProgram(
+        name="kmeans_update",
+        schedule=schedule,
+        kernel=functools.partial(_update_kernel, Kp=Kp, n_valid=n_valid),
+        in_specs=(
+            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 0], 0)),
+            pl.BlockSpec((1, bp), lambda s, sr: (sr[s, 0], 0)),
         ),
+        out_specs=[
+            pl.BlockSpec((Kp, D), lambda s, sr: (0, 0)),
+            pl.BlockSpec((1, Kp), lambda s, sr: (0, 0)),
+        ],
         out_shape=[
             jax.ShapeDtypeStruct((Kp, D), jnp.float32),
             jax.ShapeDtypeStruct((1, Kp), jnp.float32),
         ],
-        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
-        interpret=interpret,
-    )(schedule, x, assign.reshape(pt, bp))
+        columns=("i", "first_visit"),
+    )
+    return launch(program, x, assign.reshape(pt, bp), interpret=interpret)
 
 
 def kmeans_lloyd_reference(
@@ -508,3 +521,118 @@ def kmeans_lloyd_reference(
         cw = cnt[0][:, None]
         c = jnp.where(cw > 0, sums / jnp.maximum(cw, 1.0), c)
     return c, assign
+
+
+# ---------------------------------------------------------------------------
+# Shard-local Lloyd step (per-tile partials; the shard_map building block)
+# ---------------------------------------------------------------------------
+
+def kmeans_init(x: jax.Array, k: int, seed: int) -> jax.Array:
+    """Initial centroids — shared by the single-core and sharded Lloyd
+    paths so ``mesh=`` runs start from bit-identical c0.  Samples without
+    replacement when possible; the degenerate k > N case falls back to
+    sampling with replacement (duplicated centroids are harmless: the
+    argmin tie-break keeps assignments deterministic and empty centroids
+    retain their previous value)."""
+    N = x.shape[0]
+    key = jax.random.PRNGKey(seed)
+    return x[jax.random.choice(key, N, shape=(k,), replace=k > N)]
+
+
+def _shard_lloyd_kernel(
+    sched_ref, x_ref, c_ref, cn_ref, lim_ref, min_ref, arg_ref, sum_ref,
+    cnt_ref, *, bc: int, Kp: int,
+):
+    """One :func:`repro.core.kmeans_schedule` step on a shard's tiles.
+
+    Identical phase-0 assign math to :func:`_fused_lloyd_kernel` (same
+    :func:`_assign_tile`, same (value, index) merge), but phase 1 writes
+    each point tile's *per-tile* partial (sums, counts) to its own
+    output block instead of folding into a resident accumulator — every
+    phase-1 block is written exactly once (revisit-free, so this form
+    is also the hardware-safe one), and the cross-shard fold happens
+    outside the kernel in the single-core accumulation order (see
+    kernels/sharded.py).  Ragged masks are *dynamic*: ``lim_ref`` is an
+    int32[1, 2] ``(n_valid_local, k_valid)`` operand, so one traced
+    program serves every shard of an SPMD ``shard_map`` (masking with
+    the full extent is a bitwise no-op, which keeps padded and unpadded
+    shards bit-identical to the statically-masked single-core kernel).
+    """
+    s = pl.program_id(0)
+    phase = sched_ref[s, 0]
+    i = sched_ref[s, 1]
+    j = sched_ref[s, 2]
+    first = sched_ref[s, 3]
+    n_valid = lim_ref[0, 0]
+    k_valid = lim_ref[0, 1]
+
+    @pl.when(phase == 0)
+    def _assign():
+        tile_min, tile_arg = _assign_tile(
+            x_ref[...], c_ref[...], cn_ref[...], j, bc=bc, k_valid=k_valid
+        )
+
+        @pl.when(first == 1)
+        def _init():
+            min_ref[0] = tile_min
+            arg_ref[0] = tile_arg
+
+        @pl.when(first == 0)
+        def _merge():
+            cur_min = min_ref[0]
+            cur_arg = arg_ref[0]
+            better = (tile_min < cur_min) | (
+                (tile_min == cur_min) & (tile_arg < cur_arg)
+            )
+            min_ref[0] = jnp.where(better, tile_min, cur_min)
+            arg_ref[0] = jnp.where(better, tile_arg, cur_arg)
+
+    @pl.when(phase == 1)
+    def _update():
+        part_sum, part_cnt = _update_tile(
+            x_ref[...].astype(jnp.float32), arg_ref[0], i,
+            Kp=Kp, n_valid=n_valid,
+        )
+        sum_ref[0] = part_sum
+        cnt_ref[0] = part_cnt
+
+
+def kmeans_shard_program(
+    schedule, *, pt: int, ct: int, bp: int, bc: int, D: int
+) -> CurveProgram:
+    """Shard-local Lloyd-step declaration over a ``pt``-tile point shard.
+
+    Outputs: running (min, argmin) per point tile plus PER-TILE update
+    partials ``sums f32[pt, Kp, D]`` / ``counts f32[pt, 1, Kp]`` (each
+    block written exactly once in phase 1).  Operands: x shard, the
+    replicated centroids + their norm row, and the int32[1, 2]
+    ``(n_valid_local, k_valid)`` limits row described in
+    :func:`_shard_lloyd_kernel`.
+    """
+    Kp = ct * bc
+    return CurveProgram(
+        name="kmeans_shard_step",
+        schedule=schedule,
+        kernel=functools.partial(_shard_lloyd_kernel, bc=bc, Kp=Kp),
+        in_specs=(
+            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 1], 0)),
+            pl.BlockSpec((bc, D), lambda s, sr: (sr[s, 2], 0)),
+            pl.BlockSpec((1, bc), lambda s, sr: (0, sr[s, 2])),
+            pl.BlockSpec((1, 2), lambda s, sr: (0, 0)),
+        ),
+        out_specs=[
+            pl.BlockSpec((1, bp), lambda s, sr: (sr[s, 1], 0)),
+            pl.BlockSpec((1, bp), lambda s, sr: (sr[s, 1], 0)),
+            pl.BlockSpec((1, Kp, D), lambda s, sr: (sr[s, 1], 0, 0)),
+            pl.BlockSpec((1, 1, Kp), lambda s, sr: (sr[s, 1], 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pt, bp), jnp.float32),
+            jax.ShapeDtypeStruct((pt, bp), jnp.int32),
+            jax.ShapeDtypeStruct((pt, Kp, D), jnp.float32),
+            jax.ShapeDtypeStruct((pt, 1, Kp), jnp.float32),
+        ],
+        phases=("assign", "update"),
+        columns=("phase", "i", "j", "first_visit"),
+        reference=lambda *a, **kw: kmeans_lloyd_fused(*a, **kw),
+    )

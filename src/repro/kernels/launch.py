@@ -1,0 +1,138 @@
+"""launch() — the single ``pallas_call`` builder for every CurveProgram.
+
+Before this layer, each of the five fused §7 applications carried its
+own copy of the dispatch machinery: a ``PrefetchScalarGridSpec`` with
+the schedule as operand 0, ``dimension_semantics=("arbitrary", ...)``,
+the interpret/TPU switch, input/output aliasing for the in-place RMW
+kernels, and the pallas-call spy the single-dispatch tests count.
+:func:`launch` is that machinery, once: it takes a
+:class:`repro.core.CurveProgram` declaration plus the operands and
+issues exactly one ``pallas_call``.
+
+Execution semantics the launcher inherits (and every program relies
+on): **interpret mode re-fetches revisited output blocks but never
+threads ``input_output_aliases`` writes back into later aliased-input
+reads** — so programs route all RMW through output refs and use donor
+inputs only to give up their buffers.  On Mosaic the revisited-output
+re-fetch is undocumented; the hardware audit has ONE place to look now
+(DESIGN.md §Execution-layer).
+
+The dispatch spy (:class:`PallasCallCounter`) is re-exported here as
+part of the execution layer's public surface; it keeps working because
+``launch`` resolves ``pl.pallas_call`` late (attribute access at call
+time), exactly like the pre-refactor kernels did.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.program import CurveProgram
+
+from .pallas_compat import CompilerParams, PallasCallCounter
+
+__all__ = [
+    "PallasCallCounter",
+    "count_collectives",
+    "launch",
+    "on_tpu",
+    "resolve_interpret",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(flag: bool | None) -> bool:
+    """The interpret/TPU switch: ``None`` means "interpret unless the
+    default backend is a real TPU" (the project's CPU-container
+    charter); an explicit bool is passed through."""
+    if flag is None:
+        return not on_tpu()
+    return bool(flag)
+
+
+def launch(program: CurveProgram, *operands, interpret: bool | None = None):
+    """Dispatch ``program`` over ``operands`` as ONE ``pallas_call``.
+
+    Builds the scalar-prefetch grid spec from the declaration (grid
+    defaults to one step per schedule row), marks every grid dimension
+    ``arbitrary`` (schedule order is data, not structure — XLA must not
+    reorder it), applies the program's donation map, and prepends the
+    schedule as the prefetch operand.
+    """
+    grid = program.grid if program.grid is not None else (program.steps,)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=list(program.in_specs),
+        out_specs=program.out_specs,
+        scratch_shapes=list(program.scratch_shapes),
+    )
+    call = pl.pallas_call(
+        program.kernel,
+        grid_spec=grid_spec,
+        out_shape=program.out_shape,
+        input_output_aliases=dict(program.input_output_aliases),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",) * len(grid),
+        ),
+        interpret=resolve_interpret(interpret),
+    )
+    return call(program.schedule, *operands)
+
+
+# ---------------------------------------------------------------------------
+# Collective accounting (sharded-app benchmark rows)
+# ---------------------------------------------------------------------------
+
+_COLLECTIVE_PRIMS = frozenset(
+    {
+        "psum",
+        "all_gather",
+        "all_to_all",
+        "ppermute",
+        "pmax",
+        "pmin",
+        "reduce_scatter",
+    }
+)
+
+
+def _sub_jaxprs(value):
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    if isinstance(value, ClosedJaxpr):
+        yield value.jaxpr
+    elif isinstance(value, Jaxpr):
+        yield value
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _sub_jaxprs(v)
+
+
+def count_collectives(fn, *args, **kwargs) -> dict[str, int]:
+    """Collective-primitive counts in ``fn``'s jaxpr (traced, not run).
+
+    Recurses through every sub-jaxpr (pjit bodies, ``shard_map``,
+    ``scan`` — so a psum inside a scanned Lloyd step counts once: it is
+    one collective per iteration).  Used by ``bench_apps`` to record the
+    communication structure of the sharded apps next to their wall
+    clock.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    counts: dict[str, int] = {}
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name in _COLLECTIVE_PRIMS:
+                counts[name] = counts.get(name, 0) + 1
+            for param in eqn.params.values():
+                for sub in _sub_jaxprs(param):
+                    walk(sub)
+
+    walk(closed.jaxpr)
+    return counts

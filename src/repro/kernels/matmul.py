@@ -21,11 +21,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .pallas_compat import CompilerParams
+from repro.core.program import CurveProgram
+
+from .launch import launch
 
 
 def _matmul_kernel(sched_ref, a_ref, b_ref, o_ref, acc_ref, *, k_tiles: int):
@@ -73,25 +74,21 @@ def matmul_swizzled(
     assert schedule.shape == (mt * nt, 2), (schedule.shape, mt, nt)
     out_dtype = out_dtype or a.dtype
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+    program = CurveProgram(
+        name="matmul2d",
+        schedule=schedule,
+        kernel=functools.partial(_matmul_kernel, k_tiles=kt),
         grid=(mt * nt, kt),
-        in_specs=[
+        in_specs=(
             pl.BlockSpec((bm, bk), lambda s, k, sr: (sr[s, 0], k)),
             pl.BlockSpec((bk, bn), lambda s, k, sr: (k, sr[s, 1])),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda s, k, sr: (sr[s, 0], sr[s, 1])),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-    )
-    return pl.pallas_call(
-        functools.partial(_matmul_kernel, k_tiles=kt),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
-        compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary", "arbitrary"),
         ),
-        interpret=interpret,
-    )(schedule, a, b)
+        out_specs=pl.BlockSpec((bm, bn), lambda s, k, sr: (sr[s, 0], sr[s, 1])),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=(pltpu.VMEM((bm, bn), jnp.float32),),
+        columns=("i", "j"),
+    )
+    return launch(program, a, b, interpret=interpret)
 
 
 def _matmul3d_kernel(sched_ref, a_ref, b_ref, o_ref):
@@ -174,24 +171,20 @@ def matmul_swizzled_3d(
     assert schedule.shape == (mt * nt * kt, 4), (schedule.shape, mt, nt, kt)
     out_dtype = out_dtype or a.dtype
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(mt * nt * kt,),
-        in_specs=[
+    program = CurveProgram(
+        name="matmul3d",
+        schedule=schedule,
+        kernel=_matmul3d_kernel,
+        in_specs=(
             pl.BlockSpec((bm, bk), lambda s, sr: (sr[s, 0], sr[s, 2])),
             pl.BlockSpec((bk, bn), lambda s, sr: (sr[s, 2], sr[s, 1])),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda s, sr: (sr[s, 0], sr[s, 1])),
-    )
-    out = pl.pallas_call(
-        _matmul3d_kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
-        compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",),
         ),
-        interpret=interpret,
-    )(schedule, a, b)
+        out_specs=pl.BlockSpec((bm, bn), lambda s, sr: (sr[s, 0], sr[s, 1])),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        columns=("i", "j", "k", "first_visit"),
+        reference=matmul_swizzled,
+    )
+    out = launch(program, a, b, interpret=interpret)
     return out.astype(out_dtype)
 
 
@@ -232,25 +225,19 @@ def tile_update_swizzled(
     N, Kp2 = b.shape
     assert Kp == Kp2 and o.shape == (M, N)
     assert M % bm == 0 and N % bn == 0
-    steps = schedule.shape[0]
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(steps,),
-        in_specs=[
+    program = CurveProgram(
+        name="tile_update",
+        schedule=schedule,
+        kernel=functools.partial(_accum_update_kernel, alpha=alpha),
+        in_specs=(
             pl.BlockSpec((bm, bn), lambda s, sr: (sr[s, 0], sr[s, 1])),
             pl.BlockSpec((bm, Kp), lambda s, sr: (sr[s, 0], 0)),
             pl.BlockSpec((bn, Kp), lambda s, sr: (sr[s, 1], 0)),
-        ],
+        ),
         out_specs=pl.BlockSpec((bm, bn), lambda s, sr: (sr[s, 0], sr[s, 1])),
-    )
-    return pl.pallas_call(
-        functools.partial(_accum_update_kernel, alpha=alpha),
-        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), o.dtype),
         input_output_aliases={1: 0},  # o (arg after schedule) -> output 0
-        compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
-        interpret=interpret,
-    )(schedule, o, a, b)
+        columns=("i", "j"),
+    )
+    return launch(program, o, a, b, interpret=interpret)

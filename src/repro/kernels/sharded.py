@@ -1,0 +1,390 @@
+"""shard_map scale-out of the data-mining apps (curve-range partitioned).
+
+The execution layer makes this almost declarative: the same schedule
+tables that drive the fused single-core kernels drive the device mesh.
+Shards are contiguous ranges of an already-curve-ordered schedule — for
+k-means contiguous runs of (Hilbert-sorted) point tiles, for the ε-join
+contiguous runs of FGF-Hilbert triangle tile pairs — so every shard
+works a compact, low-surface region of the problem (the paper's
+locality argument applied to the mesh instead of the cache).  The
+contract of such a partition (disjoint, covering, contiguous in Hilbert
+order) is :func:`repro.core.curve_partition`; the apps use its
+SPMD-uniform specialisation — equal-length ranges, the tail padded with
+inert rows — because ``shard_map`` traces ONE program for all shards
+and therefore needs equal shapes.
+
+**k-means** (:func:`kmeans_lloyd_sharded`): every device runs the
+shard-local Lloyd-step program (phase-fused assign + per-tile update
+partials, ONE pallas dispatch per iteration per shard) under
+``shard_map`` with the iteration loop in ``lax.scan``.  Cross-shard
+reduction is split by exactness class:
+
+* counts are integer-valued f32, so a plain ``psum`` is EXACT under any
+  reduction grouping — the psum'd count accumulator of the issue;
+* the f32 coordinate sums are NOT association-free, so the default
+  ``exact=True`` path ``all_gather``\\ s the per-tile partials and folds
+  them in the *single-core fused kernel's own accumulation order*
+  (the phase-1 first-appearance order of the global schedule).  That
+  left fold reproduces the single-core result BIT-identically on any
+  mesh size — 1, 2 and 8 simulated devices all return the same bits.
+  ``exact=False`` trades that for O(K·D) communication: per-shard local
+  folds combined by ``psum`` (allclose, not bit-equal).
+
+**ε-join** (:func:`simjoin_pairs_sharded`): the distributed two-pass
+join.  Pass 1 counts hits over each shard's curve range of the triangle
+schedule; the host turns the per-step totals into a global exclusive
+prefix sum (the single-core path already host-syncs here — output size
+is data-dependent); pass 2 gives every shard a table with *local*
+offsets into its own (p_pad, 2) buffer and the shards' buffers
+concatenate into the global pair list **in exactly the single-core
+emission order** (shards hold contiguous schedule ranges).  No
+collectives at all — the only cross-device data motion is the
+replicated x and the host-side prefix sum.
+
+Both wrappers reproduce the single-core wrappers' padding/tiling
+decisions bit-for-bit (same ``bp`` clamp, same zero-pad + index-mask
+rule, same ``kmeans_init`` centroids), which is what the differential
+tests in tests/test_apps_sharded.py assert across mesh sizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (
+    curve_partition,
+    kmeans_schedule,
+    kmeans_schedule_device,
+    register_schedule_cache,
+    triangle_schedule,
+)
+
+from .kmeans import (
+    hilbert_point_order_cached,
+    kmeans_init,
+    kmeans_shard_program,
+)
+from .launch import launch, resolve_interpret
+from .simjoin import map_pairs_back, simjoin_emit_program, simjoin_hits_program
+
+# jax >= 0.5 exports shard_map at top level; 0.4.x only has the
+# experimental module (same compat rule as models/moe.py)
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+__all__ = [
+    "kmeans_lloyd_sharded",
+    "kmeans_sharded_collectives",
+    "mesh_axis",
+    "simjoin_pairs_sharded",
+]
+
+
+def mesh_axis(mesh) -> tuple[str, int]:
+    """(axis name, size) of the single axis a sharded app runs over."""
+    if mesh.devices.ndim != 1 or len(mesh.axis_names) != 1:
+        raise ValueError(
+            "sharded apps expect a 1-D mesh (see launch.mesh.make_app_mesh); "
+            f"got shape {mesh.devices.shape} axes {mesh.axis_names}"
+        )
+    return mesh.axis_names[0], int(mesh.devices.size)
+
+
+# ---------------------------------------------------------------------------
+# k-means
+# ---------------------------------------------------------------------------
+
+@register_schedule_cache
+@functools.lru_cache(maxsize=64)
+def _lloyd_fn(mesh, axis, *, curve, iters, pt, ptl, ct, bp, bc, D,
+              interpret, exact):
+    """Jitted shard_map Lloyd driver for one static configuration.
+
+    ``pt`` is the global (unsharded) point-tile count, ``ptl`` the
+    per-shard tile count (``ptl * S >= pt``; tiles past ``pt`` are pure
+    padding and excluded from the fold).  LRU-cached so warm calls reuse
+    the compiled executable; registered with the schedule-cache registry
+    because the captured tables derive from the curve registry.
+    """
+    Kp = ct * bc
+    sched = kmeans_schedule_device(curve, ptl, ct)
+    host = kmeans_schedule(curve, pt, ct)
+    # the single-core fused kernel's accumulation order: phase-1 rows
+    # visit point tiles in phase-0 first-appearance order
+    order = np.ascontiguousarray(host[host[:, 0] == 1][:, 1].astype(np.int32))
+    program_args = dict(pt=ptl, ct=ct, bp=bp, bc=bc, D=D)
+
+    def body(x_l, c0, lim):
+        program = kmeans_shard_program(sched, **program_args)
+
+        def step(carry, _):
+            c, _assign = carry
+            cnorm = jnp.sum(c**2, axis=1)[None, :]  # (1, Kp)
+            _min_m, arg, psums, pcnts = launch(
+                program, x_l, c, cnorm, lim, interpret=interpret
+            )
+            # counts: integer-valued f32 — psum is exact in any grouping
+            cnt = jax.lax.psum(jnp.sum(pcnts[:, 0, :], axis=0), axis)
+            if exact:
+                # sums: reproduce the fused kernel's left fold over the
+                # global per-tile partials, in its own phase-1 order
+                gsums = jax.lax.all_gather(psums, axis, axis=0, tiled=True)
+                ordered = gsums[jnp.asarray(order)]  # drops pure-pad tiles
+                sums, _ = jax.lax.scan(
+                    lambda acc, p: (acc + p, None), ordered[0], ordered[1:]
+                )
+            else:
+                sums = jax.lax.psum(jnp.sum(psums, axis=0), axis)
+            cw = cnt[:, None]
+            c_new = jnp.where(cw > 0, sums / jnp.maximum(cw, 1.0), c)
+            return (c_new, arg.reshape(-1)), None
+
+        init = (c0.astype(jnp.float32), jnp.zeros((x_l.shape[0],), jnp.int32))
+        (c, assign), _ = jax.lax.scan(step, init, None, length=iters)
+        return c, assign
+
+    fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(None, None), P(axis, None)),
+        out_specs=(P(None, None), P(axis)),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def _lloyd_setup(
+    x, k, *, iters, curve, seed, bp, bc, hilbert_order, interpret, mesh, exact
+):
+    """Shared host-side prep: mirrors ops.kmeans_lloyd's single-core
+    decisions (clamped blocks, zero-pad + index-mask, shared c0), then
+    pads the tile count to a multiple of the mesh size."""
+    N, D = x.shape
+    c0 = kmeans_init(x, k, seed)
+    inv = None
+    if hilbert_order:
+        perm = hilbert_point_order_cached(x)
+        inv = jnp.argsort(perm)
+        x = x[perm]
+    bp, bc = min(bp, N), min(bc, k)
+    pt = -(-N // bp)
+    axis, num = mesh_axis(mesh)
+    # SPMD-uniform curve-range partition: every shard as wide as the
+    # largest curve_partition range (= ceil), the tail pure padding
+    ptl = int(np.diff(curve_partition(pt, num)).max())
+    Nl = ptl * bp
+    Np = Nl * num
+    xp = jnp.pad(x, ((0, Np - N), (0, 0))) if Np != N else x
+    pc = (-k) % bc
+    cp = jnp.pad(c0, ((0, pc), (0, 0))) if pc else c0
+    ct = cp.shape[0] // bc
+    limits = np.stack(
+        [np.clip(N - np.arange(num) * Nl, 0, Nl), np.full(num, k)], axis=1
+    ).astype(np.int32)
+    fn = _lloyd_fn(
+        mesh, axis, curve=curve, iters=iters, pt=pt, ptl=ptl, ct=ct,
+        bp=bp, bc=bc, D=D, interpret=resolve_interpret(interpret),
+        exact=exact,
+    )
+    return fn, (xp, cp, jnp.asarray(limits)), (inv, N, k)
+
+
+def kmeans_lloyd_sharded(
+    x: jax.Array,
+    k: int,
+    *,
+    mesh,
+    iters: int = 10,
+    curve: str = "fur",
+    seed: int = 0,
+    bp: int = 256,
+    bc: int = 128,
+    hilbert_order: bool = False,
+    exact: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Lloyd k-means over a device mesh, curve-range sharded point tiles.
+
+    Returns (centroids f32[k, D], assignment int32[N]) — with
+    ``exact=True`` (default) BIT-identical to
+    ``ops.kmeans_lloyd(..., fused=True)`` on any mesh size; with
+    ``exact=False`` centroid sums reduce by plain ``psum`` (cheaper
+    collective, allclose instead of bit-equal).  One pallas dispatch
+    per iteration per shard; collectives per iteration: 1 ``psum``
+    (counts) plus, when ``exact``, 1 ``all_gather`` (per-tile sum
+    partials).
+    """
+    fn, args, (inv, N, k) = _lloyd_setup(
+        x, k, iters=iters, curve=curve, seed=seed, bp=bp, bc=bc,
+        hilbert_order=hilbert_order, interpret=interpret, mesh=mesh,
+        exact=exact,
+    )
+    c, assign = fn(*args)
+    c, assign = c[:k], assign[:N]
+    if inv is not None:
+        assign = assign[inv]
+    return c, assign
+
+
+def kmeans_sharded_collectives(x, k, *, mesh, **kw) -> dict[str, int]:
+    """Collective-primitive counts of the sharded Lloyd program (traced,
+    not run) — the communication structure ``bench_apps`` records next
+    to the wall clock.  Counts are per compiled program; collectives
+    inside the scanned step body execute once per iteration."""
+    from .launch import count_collectives
+
+    fn, args, _ = _lloyd_setup(
+        x, k, iters=kw.pop("iters", 10), curve=kw.pop("curve", "fur"),
+        seed=kw.pop("seed", 0), bp=kw.pop("bp", 256), bc=kw.pop("bc", 128),
+        hilbert_order=kw.pop("hilbert_order", False),
+        interpret=kw.pop("interpret", None), mesh=mesh,
+        exact=kw.pop("exact", True),
+    )
+    assert not kw, f"unknown kwargs: {sorted(kw)}"
+    return count_collectives(fn, *args)
+
+
+# ---------------------------------------------------------------------------
+# ε-join (distributed two-pass pair emission)
+# ---------------------------------------------------------------------------
+
+@register_schedule_cache
+@functools.lru_cache(maxsize=64)
+def _join_pass1_fn(mesh, axis, *, eps, bp, D, n_valid, interpret):
+    def body(sched_l, x):
+        program = simjoin_hits_program(
+            sched_l, eps=eps, bp=bp, D=D, n_valid=n_valid
+        )
+        return launch(program, x, x, interpret=interpret)
+
+    fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=(P(axis, None), P(axis, None)),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+@register_schedule_cache
+@functools.lru_cache(maxsize=64)
+def _join_pass2_fn(mesh, axis, *, eps, bp, D, cap, p_pad, n_valid, interpret):
+    def body(table_l, x):
+        program = simjoin_emit_program(
+            table_l, eps=eps, bp=bp, D=D, cap=cap, p_pad=p_pad,
+            n_valid=n_valid,
+        )
+        return launch(program, x, x, interpret=interpret)
+
+    fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=P(axis, None),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def simjoin_pairs_sharded(
+    x: jax.Array,
+    eps: float,
+    *,
+    mesh,
+    curve: str = "hilbert",
+    bp: int = 256,
+    hilbert_order: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Distributed two-pass ε-join pair emission.  int32[P, 2], i > j.
+
+    The triangle schedule's rows are curve-range partitioned across the
+    mesh (padded with zero-total sentinel rows to keep SPMD shapes
+    uniform): per-shard hit counts → global exclusive prefix sum on the
+    host (the inherent host sync of an exact-size join) → per-shard
+    emission at *local* offsets into per-shard buffers.  Concatenating
+    the shards' valid rows reproduces the single-core emission order
+    exactly, so the result is array-equal (not just set-equal) to
+    ``ops.simjoin_pairs``.
+    """
+    N, D = x.shape
+    if N == 0:
+        return jnp.zeros((0, 2), dtype=jnp.int32)
+    perm = None
+    if hilbert_order:
+        perm = hilbert_point_order_cached(x)
+        x = x[perm]
+    bp = min(bp, N)
+    pn = (-N) % bp
+    xp = jnp.pad(x, ((0, pn), (0, 0))) if pn else x
+    pt = xp.shape[0] // bp
+    n_valid = N if pn else None
+    interp = resolve_interpret(interpret)
+    axis, num = mesh_axis(mesh)
+
+    tri = np.asarray(triangle_schedule(curve, pt, strict=False))
+    steps = len(tri)
+    # SPMD-uniform curve-range partition of the triangle schedule's rows
+    per = int(np.diff(curve_partition(steps, num)).max())
+    pad_rows = per * num - steps
+    tri_pad = (
+        np.concatenate([tri, np.zeros((pad_rows, 2), tri.dtype)])
+        if pad_rows else tri
+    )
+
+    pass1 = _join_pass1_fn(
+        mesh, axis, eps=float(eps), bp=bp, D=D, n_valid=n_valid,
+        interpret=interp,
+    )
+    hits_i, _hits_j = pass1(jnp.asarray(tri_pad, dtype=jnp.int32), xp)
+    tot = np.asarray(jnp.sum(hits_i, axis=1)).astype(np.int64)[:steps]
+    P_total = int(tot.sum())
+    if P_total == 0:
+        return jnp.zeros((0, 2), dtype=jnp.int32)
+    assert P_total + bp * bp < 2**31, (
+        f"pair count {P_total} overflows the int32 offsets"
+    )
+    cap = min(max(8, -(-int(tot.max()) // 8) * 8), bp * bp)
+    offs = np.concatenate([[0], np.cumsum(tot)[:-1]])
+    tot_pad = np.concatenate([tot, np.zeros(pad_rows, np.int64)])
+    offs_pad = np.concatenate([offs, np.zeros(pad_rows, np.int64)])
+    shard_tot = tot_pad.reshape(num, per).sum(axis=1)
+    base = np.concatenate([[0], np.cumsum(shard_tot)[:-1]])
+    local_off = offs_pad - np.repeat(base, per)
+    local_off[steps:] = 0  # sentinel rows never write
+    p_pad = -(-(int(shard_tot.max()) + cap) // 8) * 8
+    table = np.column_stack([tri_pad, local_off, tot_pad]).astype(np.int32)
+
+    # same VMEM-budget gate as the single-core wrapper, on the per-shard
+    # buffer (≈ mesh-size times smaller): past it, fall back to the dense
+    # oracle (pair SET equal, lexicographic order — see ops.simjoin_pairs)
+    probe = simjoin_emit_program(
+        table[:per], eps=float(eps), bp=bp, D=D, cap=cap, p_pad=p_pad,
+        n_valid=n_valid,
+    )
+    from repro.core import fits_vmem
+
+    if not fits_vmem(probe, xp, xp):
+        from . import ref
+
+        pairs = jnp.asarray(ref.simjoin_pairs(x, float(eps)))
+        return map_pairs_back(pairs, perm) if perm is not None else pairs
+
+    pass2 = _join_pass2_fn(
+        mesh, axis, eps=float(eps), bp=bp, D=D, cap=cap, p_pad=p_pad,
+        n_valid=n_valid, interpret=interp,
+    )
+    out = pass2(jnp.asarray(table), xp)  # (num * p_pad, 2)
+    parts = [
+        out[s * p_pad : s * p_pad + int(shard_tot[s])] for s in range(num)
+    ]
+    pairs = jnp.concatenate(parts, axis=0)
+    if perm is not None:
+        pairs = map_pairs_back(pairs, perm)
+    return pairs

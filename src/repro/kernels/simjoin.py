@@ -45,9 +45,23 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from .pallas_compat import CompilerParams
+from repro.core.program import CurveProgram
+
+from .launch import launch
+
+
+def map_pairs_back(pairs: jax.Array, perm: jax.Array) -> jax.Array:
+    """Map (i, j) pairs emitted on Hilbert-sorted points back to the
+    original point ids, re-canonicalised to i > j (sorting can flip the
+    order within a pair).  Shared by every emission path — single-core
+    kernel, dense-oracle fallback, sharded two-pass — so the canonical
+    form can never diverge between them."""
+    pp = perm[pairs]
+    return jnp.stack(
+        [jnp.maximum(pp[:, 0], pp[:, 1]), jnp.minimum(pp[:, 0], pp[:, 1])],
+        axis=1,
+    )
 
 
 def _hit_tile(xiv, xjv, ti, tj, *, eps2: float, n_valid: int | None):
@@ -110,32 +124,40 @@ def simjoin_tile_hits_swizzled(
     """
     N, D = x.shape
     assert N % bp == 0
-    steps = schedule.shape[0]
+    program = simjoin_hits_program(
+        schedule, eps=eps, bp=bp, D=D, n_valid=n_valid
+    )
+    return launch(program, x, x, interpret=interpret)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(steps,),
-        in_specs=[
+
+def simjoin_hits_program(
+    schedule, *, eps: float, bp: int, D: int, n_valid: int | None
+) -> CurveProgram:
+    """Pass-1 declaration: one (1, bp) row/col partial pair per schedule
+    step, each written exactly once — safe under any order, so the SAME
+    program serves the single-core triangle schedule and each shard's
+    curve-range slice of it (kernels/sharded.py)."""
+    steps = schedule.shape[0]
+    return CurveProgram(
+        name="simjoin_hits",
+        schedule=schedule,
+        kernel=functools.partial(
+            _join_kernel, eps2=float(eps) ** 2, n_valid=n_valid
+        ),
+        in_specs=(
             pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 0], 0)),
             pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 1], 0)),
-        ],
+        ),
         out_specs=[
             pl.BlockSpec((1, bp), lambda s, sr: (s, 0)),
             pl.BlockSpec((1, bp), lambda s, sr: (s, 0)),
         ],
-    )
-    return pl.pallas_call(
-        functools.partial(_join_kernel, eps2=float(eps) ** 2, n_valid=n_valid),
-        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((steps, bp), jnp.int32),
             jax.ShapeDtypeStruct((steps, bp), jnp.int32),
         ],
-        compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
-        interpret=interpret,
-    )(schedule, x, x)
+        columns=("i", "j"),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "bp", "n_valid", "interpret"))
@@ -220,25 +242,33 @@ def simjoin_emit_swizzled(
     """
     N, D = x.shape
     assert N % bp == 0 and cap <= bp * bp and p_pad >= cap
-    steps = table.shape[0]
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(steps,),
-        in_specs=[
-            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 0], 0)),
-            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 1], 0)),
-        ],
-        out_specs=pl.BlockSpec((p_pad, 2), lambda s, sr: (0, 0)),
+    program = simjoin_emit_program(
+        table, eps=eps, bp=bp, D=D, cap=cap, p_pad=p_pad, n_valid=n_valid
     )
-    return pl.pallas_call(
-        functools.partial(
+    return launch(program, x, x, interpret=interpret)
+
+
+def simjoin_emit_program(
+    table, *, eps: float, bp: int, D: int, cap: int, p_pad: int,
+    n_valid: int | None,
+) -> CurveProgram:
+    """Pass-2 declaration: the single resident (p_pad, 2) pair buffer is
+    masked-RMW'd a cap-row window per step at prefetched offsets.  The
+    ``p_pad·2`` int32 residency is what the ops wrapper gates against
+    the VMEM budget (falling back to the dense oracle).  With per-shard
+    tables carrying *local* offsets, the same program is the emission
+    half of the distributed two-pass join."""
+    return CurveProgram(
+        name="simjoin_emit",
+        schedule=table,
+        kernel=functools.partial(
             _emit_kernel, eps2=float(eps) ** 2, n_valid=n_valid, cap=cap, bp=bp
         ),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((p_pad, 2), jnp.int32),
-        compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",),
+        in_specs=(
+            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 0], 0)),
+            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 1], 0)),
         ),
-        interpret=interpret,
-    )(table, x, x)
+        out_specs=pl.BlockSpec((p_pad, 2), lambda s, sr: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p_pad, 2), jnp.int32),
+        columns=("i", "j", "offset", "total"),
+    )

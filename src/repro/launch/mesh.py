@@ -64,3 +64,24 @@ def hilbert_grid_permutation(n: int, m: int) -> np.ndarray:
 
 def mesh_axis_sizes(mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def make_app_mesh(num_devices: int | None = None, *, axis: str = "shards"):
+    """1-D mesh for the curve-range-sharded data-mining apps.
+
+    ``ops.kmeans_lloyd(..., mesh=)`` / ``ops.simjoin_pairs(..., mesh=)``
+    shard contiguous curve ranges over this single axis.  Defaults to
+    all visible devices; on a CPU container, simulate a multi-device
+    host with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (set before jax import — the CI sharded job does exactly this).
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else int(num_devices)
+    if n <= 0 or n > len(devices):
+        raise ValueError(
+            f"num_devices={num_devices} out of range (have {len(devices)})"
+        )
+    return Mesh(np.asarray(devices[:n]), (axis,))

@@ -13,6 +13,7 @@ cell lowers.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -20,6 +21,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import ModelConfig, decode_step, init_cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _masked_step(params, toks, cache, pos, mask, *, cfg):
+    """Decode one token; slots with mask=False keep their cache untouched
+    (recurrent SSM states must not see filler tokens).
+
+    Module-level jit (cfg is static/hashable) so every engine over the
+    same config shares ONE compiled executable.  The per-engine closure
+    this replaces re-jitted per instance, and two XLA compilations of
+    the same jaxpr are not guaranteed instruction-schedule-identical —
+    their logits could differ in the last ulp, which is exactly the
+    cross-program argmax flip the serving differential tests kept
+    tripping over (and a waste of compile time in production).
+    """
+    logits, new_c = decode_step(params, toks, cache, pos, cfg)
+
+    def merge(old, new):
+        m = mask.reshape((1, -1) + (1,) * (old.ndim - 2))
+        return jnp.where(m, new, old)
+
+    return logits, jax.tree.map(merge, cache, new_c)
 
 
 @dataclasses.dataclass
@@ -56,19 +79,7 @@ class ServeEngine:
         self.key = jax.random.PRNGKey(seed)
         self._rid = 0
         self._queue: list[Request] = []
-
-        def masked_step(p, t, c, pos, mask):
-            """Decode one token; slots with mask=False keep their cache
-            untouched (recurrent SSM states must not see filler tokens)."""
-            logits, new_c = decode_step(p, t, c, pos, cfg)
-
-            def merge(old, new):
-                m = mask.reshape((1, -1) + (1,) * (old.ndim - 2))
-                return jnp.where(m, new, old)
-
-            return logits, jax.tree.map(merge, c, new_c)
-
-        self._step = jax.jit(masked_step)
+        self._step = functools.partial(_masked_step, cfg=cfg)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int = 16) -> Request:
