@@ -230,7 +230,12 @@ def run() -> list[dict]:
     # rows appear for every mesh size the process can simulate (CI's
     # sharded job and the committed BENCH_curves.json run under
     # XLA_FLAGS=--xla_force_host_platform_device_count=8 → 1/2/8).
-    from repro.kernels.sharded import kmeans_sharded_collectives
+    from repro.kernels.sharded import (
+        kmeans_sharded_collectives,
+        kmeans_sharded_volume,
+        simjoin_pairs_sharded,
+        simjoin_sharded_volume,
+    )
     from repro.launch.mesh import make_app_mesh
 
     sizes = [s for s in (1, 2, 8) if s <= len(jax.devices())]
@@ -248,26 +253,88 @@ def run() -> list[dict]:
         )
         coll = kmeans_sharded_collectives(xs, 16, mesh=mesh, **skm_kw)
         coll_s = "+".join(f"{v}x{k}" for k, v in sorted(coll.items()))
+        vol_e = kmeans_sharded_volume(xs, 16, mesh=mesh, **skm_kw)
         rows.append({
             "bench": "apps_sharded", "name": f"kmeans_mesh{s}",
             "value": round(warm_s * 1e3, 1),
+            "bytes_per_shard": int(vol_e["bytes_per_shard"]),
             "derived": f"ms warm (single-core {warm_1 * 1e3:.1f}); "
                        f"collectives/iter {coll_s}; bit_identical={bit}",
         })
+        # hierarchical tree reduction: deterministic fold order (same
+        # bits every run), allclose to single-core, fewer bytes
+        (c3, _a3), warm_t = _timed_best(
+            lambda: ops.kmeans_lloyd(xs, 16, mesh=mesh, shard_reduce="tree",
+                                     **skm_kw))
+        vol_t = kmeans_sharded_volume(xs, 16, mesh=mesh, reduce="tree",
+                                      **skm_kw)
+        close = bool(np.allclose(np.asarray(c1), np.asarray(c3),
+                                 rtol=1e-5, atol=1e-5))
+        rows.append({
+            "bench": "apps_sharded", "name": f"kmeans_mesh{s}_tree",
+            "value": round(warm_t * 1e3, 1),
+            "bytes_per_shard": int(vol_t["bytes_per_shard"]),
+            "derived": f"ms warm; tree-reduce bytes/shard "
+                       f"{vol_t['bytes_per_shard']} vs exact "
+                       f"{vol_e['bytes_per_shard']}; allclose={close}",
+        })
 
+    # ε-join: replicated (PR-5 baseline) vs halo exchange, same pairs.
+    # bytes_per_shard is a top-level key on every variant row — the CI
+    # bench smoke gates on halo < replicated.
     xjs = jnp.asarray(rng.normal(size=(384, 4)) * 0.6, jnp.float32)
-    sj_kw = dict(eps=0.8, bp=64, interpret=True)
-    pj1, warm_j1 = _timed_best(lambda: ops.simjoin_pairs(xjs, **sj_kw))
+    sj_kw = dict(bp=64, hilbert_order=True, interpret=True)
+    pj1, warm_j1 = _timed_best(
+        lambda: ops.simjoin_pairs(xjs, eps=0.8, **sj_kw))
     for s in sizes:
         mesh = make_app_mesh(s)
-        pj2, warm_js = _timed_best(
-            lambda: ops.simjoin_pairs(xjs, mesh=mesh, **sj_kw))
-        bit = bool(np.array_equal(np.asarray(pj1), np.asarray(pj2)))
+        for variant, halo in (("replicated", False), ("halo", True)):
+            pj2, warm_js = _timed_best(
+                lambda: simjoin_pairs_sharded(xjs, 0.8, mesh=mesh, halo=halo,
+                                              **sj_kw))
+            vol = simjoin_sharded_volume(xjs, 0.8, mesh=mesh, halo=halo,
+                                         **sj_kw)
+            bit = bool(np.array_equal(np.asarray(pj1), np.asarray(pj2)))
+            coll_s = "+".join(
+                f"{v}x{k}" for k, v in sorted(vol["counts"].items())
+            ) or "0"
+            rows.append({
+                "bench": "apps_sharded", "name": f"simjoin_mesh{s}_{variant}",
+                "value": round(warm_js * 1e3, 1),
+                "bytes_per_shard": int(vol["bytes_per_shard"]),
+                "derived": f"ms warm (single-core {warm_j1 * 1e3:.1f}); "
+                           f"{len(np.asarray(pj2))} pairs; collectives "
+                           f"{coll_s}; bit_identical={bit}",
+            })
+
+    # halo bytes scale with the BOUNDARY area: 4x the points in 4x the
+    # area (fixed density) must grow halo traffic sublinearly while full
+    # replication grows 4x — the tentpole's measurable claim
+    if sizes and max(sizes) >= 2:
+        mesh = make_app_mesh(max(sizes))
+        rngu = np.random.default_rng(11)
+        scaling = {}
+        for N, side in ((512, 1.0), (2048, 2.0)):
+            xh = jnp.asarray(rngu.uniform(size=(N, 2)) * side, jnp.float32)
+            kwv = dict(mesh=mesh, bp=64, hilbert_order=True, interpret=True)
+            vh = simjoin_sharded_volume(xh, 0.05, halo=True, **kwv)
+            vr = simjoin_sharded_volume(xh, 0.05, halo=False, **kwv)
+            scaling[N] = (vh["bytes_per_shard"], vr["bytes_per_shard"])
+            rows.append({
+                "bench": "apps_sharded", "name": f"simjoin_halo_scaling_N{N}",
+                "value": int(vh["bytes_per_shard"]),
+                "bytes_per_shard": int(vh["bytes_per_shard"]),
+                "derived": f"halo bytes/shard (replicated "
+                           f"{vr['bytes_per_shard']}); uniform density, "
+                           f"side={side}, mesh{max(sizes)}",
+            })
+        ratio_h = scaling[2048][0] / scaling[512][0]
+        ratio_r = scaling[2048][1] / scaling[512][1]
         rows.append({
-            "bench": "apps_sharded", "name": f"simjoin_mesh{s}",
-            "value": round(warm_js * 1e3, 1),
-            "derived": f"ms warm (single-core {warm_j1 * 1e3:.1f}); "
-                       f"{len(np.asarray(pj2))} pairs; collectives 0 "
-                       f"(host-sync two-pass); bit_identical={bit}",
+            "bench": "apps_sharded", "name": "simjoin_halo_scaling_ratio",
+            "value": round(ratio_h, 2),
+            "derived": f"halo bytes growth for 4x N at fixed density "
+                       f"(replicated grows {ratio_r:.2f}x); sublinear "
+                       f"boundary scaling",
         })
     return rows

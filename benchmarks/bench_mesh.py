@@ -39,4 +39,38 @@ def run(n: int = 16, m: int = 16) -> list[dict]:
             "value": hops_model + hops_data,
             "derived": f"model-axis={hops_model} data-axis={hops_data}",
         })
+    rows += _halo_bytes_rows()
+    return rows
+
+
+def _halo_bytes_rows() -> list[dict]:
+    """Halo-exchange traffic of the sharded ε-join as the mesh widens:
+    bytes per shard for boundary strips vs full replication at every
+    simulable mesh size.  More shards → narrower resident curve ranges →
+    more boundary per shard; replication is flat (every shard always
+    receives all of x).  jax is imported lazily so the hop-count rows
+    above stay numpy-only."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.sharded import simjoin_sharded_volume
+    from repro.launch.mesh import make_app_mesh
+
+    rng = np.random.default_rng(23)
+    x = jnp.asarray(rng.uniform(size=(1024, 2)), jnp.float32)
+    rows = []
+    for s in (1, 2, 4, 8):
+        if s > len(jax.devices()):
+            continue
+        mesh = make_app_mesh(s)
+        kw = dict(mesh=mesh, bp=64, hilbert_order=True, interpret=True)
+        vh = simjoin_sharded_volume(x, 0.04, halo=True, **kw)
+        vr = simjoin_sharded_volume(x, 0.04, halo=False, **kw)
+        rows.append({
+            "bench": "mesh_halo", "name": f"simjoin_halo_bytes_mesh{s}",
+            "value": int(vh["bytes_per_shard"]),
+            "bytes_per_shard": int(vh["bytes_per_shard"]),
+            "derived": f"bytes/shard boundary strips (replicated "
+                       f"{vr['bytes_per_shard']}); N=1024 uniform 2-D",
+        })
     return rows

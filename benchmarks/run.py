@@ -56,13 +56,21 @@ def main() -> None:
     print("bench,name,value,derived")
     t0 = time.time()
     collected: list[dict] = []
+    run_counts: dict[str, int] = {}
     for name, mod in modules:
         if selected and name not in selected:
             continue
+        n_before = len(collected)
         for row in mod.run():
+            # every row carries the suite (module) that produced it — the
+            # summary counts below are validated against this tag, so a
+            # module emitting under a foreign "bench" label can't skew
+            # another suite's trajectory silently
+            row["suite"] = name
             collected.append(row)
             derived = str(row.get("derived", "")).replace(",", ";")
             print(f"{row['bench']},{row['name']},{row['value']},{derived}")
+        run_counts[name] = len(collected) - n_before
     if json_path:
         if not collected:
             # an empty snapshot silently breaks the perf trajectory — fail
@@ -73,15 +81,27 @@ def main() -> None:
         # stable top-level summary so BENCH_*.json snapshots diff cleanly
         # across PRs: schema version, sorted suite names, per-suite row
         # counts.  "rows" stays the flat list earlier tooling reads.
-        row_counts: dict[str, int] = {}
+        # Counted two independent ways — per module while running, and
+        # from the per-row "suite" tags at write time — and the snapshot
+        # is refused if they disagree (a row dropped, duplicated or
+        # re-tagged between collection and serialisation).
+        row_counts = {k: v for k, v in run_counts.items() if v}
+        tag_counts: dict[str, int] = {}
         for row in collected:
-            row_counts[row["bench"]] = row_counts.get(row["bench"], 0) + 1
+            tag_counts[row["suite"]] = tag_counts.get(row["suite"], 0) + 1
         summary = {
-            "schema_version": 2,
+            "schema_version": 3,
             "suites": sorted(row_counts),
             "row_counts": {k: row_counts[k] for k in sorted(row_counts)},
             "total_rows": len(collected),
         }
+        if (
+            tag_counts != summary["row_counts"]
+            or sum(tag_counts.values()) != summary["total_rows"]
+        ):
+            print(f"# refusing to write {json_path}: summary/row mismatch "
+                  f"{summary['row_counts']} vs {tag_counts}", file=sys.stderr)
+            sys.exit(1)
         with open(json_path, "w") as f:
             json.dump({"summary": summary, "rows": collected}, f, indent=1)
         print(f"# wrote {json_path} ({len(collected)} rows, "

@@ -15,6 +15,8 @@ Modules:
   program       CurveProgram declarations + VMEM budget +
                 curve-range partitioning                    (execution layer)
   jax_hilbert   device-side vectorised codec                (TPU adaptation)
+  neighbors     curve-neighbour range calculus (halo
+                exchange for the sharded apps)              (beyond-paper)
 """
 from .curve import (
     SpaceFillingCurve,
@@ -92,6 +94,12 @@ from .lindenmayer import (
     hilbert_path_recursive,
     hilbert_path_vectorised,
     lindenmayer_nonrecursive,
+)
+from .neighbors import (
+    curve_range_boxes,
+    halo_ranges,
+    halo_ranges_oracle,
+    neighbor_tile_mask,
 )
 from .peano import peano_decode, peano_encode, peano_path
 from .program import (

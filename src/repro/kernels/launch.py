@@ -34,6 +34,7 @@ from .pallas_compat import CompilerParams, PallasCallCounter
 
 __all__ = [
     "PallasCallCounter",
+    "collective_volume",
     "count_collectives",
     "launch",
     "on_tpu",
@@ -136,3 +137,83 @@ def count_collectives(fn, *args, **kwargs) -> dict[str, int]:
 
     walk(closed.jaxpr)
     return counts
+
+
+def _aval_bytes(var) -> int:
+    aval = getattr(var, "aval", None)
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n * dtype.itemsize
+
+
+def _eqn_bytes(eqn) -> int:
+    """Per-shard traffic model of one collective equation, from its
+    per-shard avals (inside ``shard_map`` the avals ARE shard-local):
+
+    * ``ppermute``/``all_to_all``: each shard sends/receives its operand
+      once — operand bytes;
+    * ``all_gather``: each shard receives everyone else's part — output
+      minus operand bytes;
+    * ``psum``/``pmax``/``pmin``: ring all-reduce — ~2× operand bytes
+      (reduce-scatter + all-gather phases);
+    * ``reduce_scatter``: operand minus output bytes.
+    """
+    name = eqn.primitive.name
+    in_b = sum(_aval_bytes(v) for v in eqn.invars)
+    out_b = sum(_aval_bytes(v) for v in eqn.outvars)
+    if name == "all_gather":
+        return max(out_b - in_b, 0)
+    if name == "reduce_scatter":
+        return max(in_b - out_b, 0)
+    if name in ("psum", "pmax", "pmin"):
+        return 2 * in_b
+    return in_b  # ppermute, all_to_all
+
+
+def collective_volume(
+    fn, *args, replicated_bytes: int = 0, **kwargs
+) -> dict:
+    """Collective *volume* accountant: executed primitive counts plus a
+    bytes-per-shard model, from ``fn``'s jaxpr (traced, not run).
+
+    Unlike :func:`count_collectives` (static per-program counts, the
+    contract of the structure tests), this walks with an execution
+    multiplier — a collective inside a ``scan`` of length L counts L
+    times — and prices each equation from its per-shard avals
+    (:func:`_eqn_bytes`).  ``replicated_bytes`` adds caller-declared
+    operand replication (a ``P(None, None)`` in_spec moves bytes per
+    shard without any collective in the jaxpr — the replicated ε-join's
+    entire cost).  Returns ``{"counts", "bytes", "replicated_bytes",
+    "bytes_per_shard"}`` with ``bytes_per_shard`` the grand total the
+    ``bench_apps``/``bench_mesh`` rows record and CI gates on.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    counts: dict[str, int] = {}
+    bts: dict[str, int] = {}
+
+    def walk(jaxpr, mult):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            inner = mult
+            if name == "scan":
+                inner = mult * int(eqn.params.get("length", 1))
+            if name in _COLLECTIVE_PRIMS:
+                counts[name] = counts.get(name, 0) + mult
+                bts[name] = bts.get(name, 0) + mult * _eqn_bytes(eqn)
+            for param in eqn.params.values():
+                for sub in _sub_jaxprs(param):
+                    walk(sub, inner)
+
+    walk(closed.jaxpr, 1)
+    total = sum(bts.values()) + int(replicated_bytes)
+    return {
+        "counts": counts,
+        "bytes": bts,
+        "replicated_bytes": int(replicated_bytes),
+        "bytes_per_shard": total,
+    }

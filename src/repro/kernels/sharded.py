@@ -21,25 +21,38 @@ reduction is split by exactness class:
 
 * counts are integer-valued f32, so a plain ``psum`` is EXACT under any
   reduction grouping — the psum'd count accumulator of the issue;
-* the f32 coordinate sums are NOT association-free, so the default
-  ``exact=True`` path ``all_gather``\\ s the per-tile partials and folds
-  them in the *single-core fused kernel's own accumulation order*
-  (the phase-1 first-appearance order of the global schedule).  That
-  left fold reproduces the single-core result BIT-identically on any
-  mesh size — 1, 2 and 8 simulated devices all return the same bits.
-  ``exact=False`` trades that for O(K·D) communication: per-shard local
-  folds combined by ``psum`` (allclose, not bit-equal).
+* the f32 coordinate sums are NOT association-free, so ``reduce``
+  selects an exactness class: ``"exact"`` (default) ``all_gather``\\ s
+  the per-tile partials and folds them in the *single-core fused
+  kernel's own accumulation order* (the phase-1 first-appearance order
+  of the global schedule) — BIT-identical to single-core on any mesh
+  size; ``"tree"`` folds locally then combines shards through a fixed
+  recursive-doubling butterfly (deterministic association ⇒ bit-stable
+  run to run, O(K·D·log S) bytes, allclose to single-core);
+  ``"psum"`` leaves the association to the compiler (cheapest).
 
 **ε-join** (:func:`simjoin_pairs_sharded`): the distributed two-pass
-join.  Pass 1 counts hits over each shard's curve range of the triangle
+join, in two data-distribution modes.  Both share the schedule split:
+pass 1 counts hits over each shard's curve range of the triangle
 schedule; the host turns the per-step totals into a global exclusive
 prefix sum (the single-core path already host-syncs here — output size
-is data-dependent); pass 2 gives every shard a table with *local*
-offsets into its own (p_pad, 2) buffer and the shards' buffers
-concatenate into the global pair list **in exactly the single-core
-emission order** (shards hold contiguous schedule ranges).  No
-collectives at all — the only cross-device data motion is the
-replicated x and the host-side prefix sum.
+is data-dependent); pass 2 emits with *local* offsets into per-shard
+(p_pad, 2) buffers that concatenate (a host-side gather in the halo
+case) into the global pair list **in exactly the single-core emission
+order** (shards hold contiguous schedule ranges of the global pruned
+triangle).
+
+* ``halo=True`` (default): x is POINT-sharded ``P(axis, None)``.  The
+  ε-pruned schedule (tile reach from :func:`repro.core.
+  neighbor_tile_mask` on Hilbert key ranges, or bounding-box gaps)
+  assigns each triangle row to the owner of its i-tile; the foreign
+  j-tiles each shard still needs are ``ppermute``\\ d in as boundary
+  strips into a fixed-size halo buffer (uniform across shards — SPMD).
+  Pass 2 reuses pass 1's buffer output, so each strip moves once.
+  Collective bytes scale with the boundary area, not N.
+* ``halo=False``: the PR-5 path — x fully replicated to every shard,
+  zero jaxpr collectives; the replication itself is the (O(N·D) per
+  shard) cost, which :func:`simjoin_sharded_volume` accounts.
 
 Both wrappers reproduce the single-core wrappers' padding/tiling
 decisions bit-for-bit (same ``bp`` clamp, same zero-pad + index-mask
@@ -57,19 +70,28 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import (
     curve_partition,
+    hilbert_encode_nd,
     kmeans_schedule,
     kmeans_schedule_device,
+    neighbor_tile_mask,
     register_schedule_cache,
     triangle_schedule,
 )
 
 from .kmeans import (
+    _quantise_points,
     hilbert_point_order_cached,
     kmeans_init,
     kmeans_shard_program,
 )
-from .launch import launch, resolve_interpret
-from .simjoin import map_pairs_back, simjoin_emit_program, simjoin_hits_program
+from .launch import collective_volume, launch, resolve_interpret
+from .simjoin import (
+    check_pair_offsets,
+    map_pairs_back,
+    simjoin_emit_halo_program,
+    simjoin_emit_program,
+    simjoin_hits_rows_program,
+)
 
 # jax >= 0.5 exports shard_map at top level; 0.4.x only has the
 # experimental module (same compat rule as models/moe.py)
@@ -80,8 +102,10 @@ if _shard_map is None:
 __all__ = [
     "kmeans_lloyd_sharded",
     "kmeans_sharded_collectives",
+    "kmeans_sharded_volume",
     "mesh_axis",
     "simjoin_pairs_sharded",
+    "simjoin_sharded_volume",
 ]
 
 
@@ -99,16 +123,57 @@ def mesh_axis(mesh) -> tuple[str, int]:
 # k-means
 # ---------------------------------------------------------------------------
 
+def _tree_reduce(v: jax.Array, axis: str, num: int) -> jax.Array:
+    """Hierarchical fixed-topology sum across the mesh — deterministic
+    association at every mesh size, so results are bit-stable run to run
+    (but NOT bit-identical to the single-core left fold: the grouping
+    differs — see DESIGN.md §Halo-exchange, exactness classes).
+
+    Power-of-two meshes run a recursive-doubling butterfly: at round r,
+    partners ``ppermute`` their partials and both add (lower index
+    first), so O(K·D·log S) bytes replace the exact path's O(K·D·S)
+    ``all_gather``.  Other sizes ``all_gather`` the per-shard partials
+    (already locally folded — S rows, not the exact path's global tile
+    count) and fold a static balanced binary tree.
+    """
+    if num == 1:
+        return v
+    if num & (num - 1) == 0:
+        idx = jax.lax.axis_index(axis)
+        r = 1
+        while r < num:
+            other = jax.lax.ppermute(
+                v, axis, perm=[(i, i ^ r) for i in range(num)]
+            )
+            low = (idx & r) == 0
+            a = jnp.where(low, v, other)
+            b = jnp.where(low, other, v)
+            v = a + b
+            r <<= 1
+        return v
+    g = jax.lax.all_gather(v, axis, axis=0)  # (num, ...)
+    vals = [g[i] for i in range(num)]
+    while len(vals) > 1:
+        vals = [
+            vals[i] + vals[i + 1] if i + 1 < len(vals) else vals[i]
+            for i in range(0, len(vals), 2)
+        ]
+    return vals[0]
+
+
 @register_schedule_cache
 @functools.lru_cache(maxsize=64)
 def _lloyd_fn(mesh, axis, *, curve, iters, pt, ptl, ct, bp, bc, D,
-              interpret, exact):
+              interpret, reduce):
     """Jitted shard_map Lloyd driver for one static configuration.
 
     ``pt`` is the global (unsharded) point-tile count, ``ptl`` the
     per-shard tile count (``ptl * S >= pt``; tiles past ``pt`` are pure
-    padding and excluded from the fold).  LRU-cached so warm calls reuse
-    the compiled executable; registered with the schedule-cache registry
+    padding and excluded from the exact fold).  ``reduce`` picks the
+    coordinate-sum exactness class: ``"exact"`` (bit-identical global
+    left fold), ``"tree"`` (deterministic fixed-topology tree) or
+    ``"psum"`` (plain psum).  LRU-cached so warm calls reuse the
+    compiled executable; registered with the schedule-cache registry
     because the captured tables derive from the curve registry.
     """
     Kp = ct * bc
@@ -118,6 +183,7 @@ def _lloyd_fn(mesh, axis, *, curve, iters, pt, ptl, ct, bp, bc, D,
     # visit point tiles in phase-0 first-appearance order
     order = np.ascontiguousarray(host[host[:, 0] == 1][:, 1].astype(np.int32))
     program_args = dict(pt=ptl, ct=ct, bp=bp, bc=bc, D=D)
+    _, num = mesh_axis(mesh)
 
     def body(x_l, c0, lim):
         program = kmeans_shard_program(sched, **program_args)
@@ -130,7 +196,7 @@ def _lloyd_fn(mesh, axis, *, curve, iters, pt, ptl, ct, bp, bc, D,
             )
             # counts: integer-valued f32 — psum is exact in any grouping
             cnt = jax.lax.psum(jnp.sum(pcnts[:, 0, :], axis=0), axis)
-            if exact:
+            if reduce == "exact":
                 # sums: reproduce the fused kernel's left fold over the
                 # global per-tile partials, in its own phase-1 order
                 gsums = jax.lax.all_gather(psums, axis, axis=0, tiled=True)
@@ -138,7 +204,15 @@ def _lloyd_fn(mesh, axis, *, curve, iters, pt, ptl, ct, bp, bc, D,
                 sums, _ = jax.lax.scan(
                     lambda acc, p: (acc + p, None), ordered[0], ordered[1:]
                 )
-            else:
+            elif reduce == "tree":
+                # local left fold over this shard's per-tile partials in
+                # local tile order (pure-pad tiles add exact zeros), then
+                # the fixed-topology cross-shard tree
+                local, _ = jax.lax.scan(
+                    lambda acc, p: (acc + p, None), psums[0], psums[1:]
+                )
+                sums = _tree_reduce(local, axis, num)
+            else:  # "psum"
                 sums = jax.lax.psum(jnp.sum(psums, axis=0), axis)
             cw = cnt[:, None]
             c_new = jnp.where(cw > 0, sums / jnp.maximum(cw, 1.0), c)
@@ -158,8 +232,20 @@ def _lloyd_fn(mesh, axis, *, curve, iters, pt, ptl, ct, bp, bc, D,
     return jax.jit(fn)
 
 
+def _resolve_reduce(exact: bool, reduce: str | None) -> str:
+    """Map the legacy ``exact`` bool plus the new ``reduce`` override to
+    one of the three reduction classes."""
+    if reduce is None:
+        return "exact" if exact else "psum"
+    if reduce not in ("exact", "tree", "psum"):
+        raise ValueError(
+            f"reduce must be 'exact', 'tree' or 'psum'; got {reduce!r}"
+        )
+    return reduce
+
+
 def _lloyd_setup(
-    x, k, *, iters, curve, seed, bp, bc, hilbert_order, interpret, mesh, exact
+    x, k, *, iters, curve, seed, bp, bc, hilbert_order, interpret, mesh, reduce
 ):
     """Shared host-side prep: mirrors ops.kmeans_lloyd's single-core
     decisions (clamped blocks, zero-pad + index-mask, shared c0), then
@@ -189,7 +275,7 @@ def _lloyd_setup(
     fn = _lloyd_fn(
         mesh, axis, curve=curve, iters=iters, pt=pt, ptl=ptl, ct=ct,
         bp=bp, bc=bc, D=D, interpret=resolve_interpret(interpret),
-        exact=exact,
+        reduce=reduce,
     )
     return fn, (xp, cp, jnp.asarray(limits)), (inv, N, k)
 
@@ -206,23 +292,36 @@ def kmeans_lloyd_sharded(
     bc: int = 128,
     hilbert_order: bool = False,
     exact: bool = True,
+    reduce: str | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Lloyd k-means over a device mesh, curve-range sharded point tiles.
 
-    Returns (centroids f32[k, D], assignment int32[N]) — with
-    ``exact=True`` (default) BIT-identical to
-    ``ops.kmeans_lloyd(..., fused=True)`` on any mesh size; with
-    ``exact=False`` centroid sums reduce by plain ``psum`` (cheaper
-    collective, allclose instead of bit-equal).  One pallas dispatch
-    per iteration per shard; collectives per iteration: 1 ``psum``
-    (counts) plus, when ``exact``, 1 ``all_gather`` (per-tile sum
-    partials).
+    Returns (centroids f32[k, D], assignment int32[N]).  The centroid
+    coordinate-sum reduction comes in three exactness classes, picked by
+    ``reduce`` (``exact`` is the legacy bool alias: True → ``"exact"``,
+    False → ``"psum"``; an explicit ``reduce`` wins):
+
+    * ``"exact"`` (default): BIT-identical to
+      ``ops.kmeans_lloyd(..., fused=True)`` on any mesh size — global
+      per-tile partials are ``all_gather``\\ ed and left-folded in the
+      fused kernel's own order.  O(K·D·S·tiles) bytes.
+    * ``"tree"``: hierarchical fixed-topology reduction — local left
+      fold per shard, then a recursive-doubling butterfly (power-of-two
+      meshes; O(K·D·log S) bytes) or a static balanced pairwise tree.
+      Deterministic fold order ⇒ bit-stable across runs at every mesh
+      size, but NOT bit-identical to the single-core left fold (the
+      association differs; allclose).
+    * ``"psum"``: plain ``psum`` — cheapest, association up to the
+      compiler (allclose, no determinism contract).
+
+    One pallas dispatch per iteration per shard; counts always reduce by
+    ``psum`` (integer-valued f32 — exact in any grouping).
     """
     fn, args, (inv, N, k) = _lloyd_setup(
         x, k, iters=iters, curve=curve, seed=seed, bp=bp, bc=bc,
         hilbert_order=hilbert_order, interpret=interpret, mesh=mesh,
-        exact=exact,
+        reduce=_resolve_reduce(exact, reduce),
     )
     c, assign = fn(*args)
     c, assign = c[:k], assign[:N]
@@ -231,7 +330,21 @@ def kmeans_lloyd_sharded(
     return c, assign
 
 
-def kmeans_sharded_collectives(x, k, *, mesh, **kw) -> dict[str, int]:
+def kmeans_sharded_collectives(
+    x,
+    k,
+    *,
+    mesh,
+    iters: int = 10,
+    curve: str = "fur",
+    seed: int = 0,
+    bp: int = 256,
+    bc: int = 128,
+    hilbert_order: bool = False,
+    exact: bool = True,
+    reduce: str | None = None,
+    interpret: bool | None = None,
+) -> dict[str, int]:
     """Collective-primitive counts of the sharded Lloyd program (traced,
     not run) — the communication structure ``bench_apps`` records next
     to the wall clock.  Counts are per compiled program; collectives
@@ -239,14 +352,38 @@ def kmeans_sharded_collectives(x, k, *, mesh, **kw) -> dict[str, int]:
     from .launch import count_collectives
 
     fn, args, _ = _lloyd_setup(
-        x, k, iters=kw.pop("iters", 10), curve=kw.pop("curve", "fur"),
-        seed=kw.pop("seed", 0), bp=kw.pop("bp", 256), bc=kw.pop("bc", 128),
-        hilbert_order=kw.pop("hilbert_order", False),
-        interpret=kw.pop("interpret", None), mesh=mesh,
-        exact=kw.pop("exact", True),
+        x, k, iters=iters, curve=curve, seed=seed, bp=bp, bc=bc,
+        hilbert_order=hilbert_order, interpret=interpret, mesh=mesh,
+        reduce=_resolve_reduce(exact, reduce),
     )
-    assert not kw, f"unknown kwargs: {sorted(kw)}"
     return count_collectives(fn, *args)
+
+
+def kmeans_sharded_volume(
+    x,
+    k,
+    *,
+    mesh,
+    iters: int = 10,
+    curve: str = "fur",
+    seed: int = 0,
+    bp: int = 256,
+    bc: int = 128,
+    hilbert_order: bool = False,
+    exact: bool = True,
+    reduce: str | None = None,
+    interpret: bool | None = None,
+) -> dict:
+    """Collective *volume* of the sharded Lloyd program (traced, not
+    run): executed counts + modelled bytes per shard, including the
+    ``P(None, None)`` centroid replication (no collective in the jaxpr,
+    but every shard receives the full centroid block)."""
+    fn, args, _ = _lloyd_setup(
+        x, k, iters=iters, curve=curve, seed=seed, bp=bp, bc=bc,
+        hilbert_order=hilbert_order, interpret=interpret, mesh=mesh,
+        reduce=_resolve_reduce(exact, reduce),
+    )
+    return collective_volume(fn, *args, replicated_bytes=args[1].nbytes)
 
 
 # ---------------------------------------------------------------------------
@@ -256,8 +393,11 @@ def kmeans_sharded_collectives(x, k, *, mesh, **kw) -> dict[str, int]:
 @register_schedule_cache
 @functools.lru_cache(maxsize=64)
 def _join_pass1_fn(mesh, axis, *, eps, bp, D, n_valid, interpret):
+    # rows-only program: the column partials of the full hits program are
+    # dead in the two-pass join, so the shard_map must not materialise
+    # (and un-shard) a second per-shard (steps, bp) array
     def body(sched_l, x):
-        program = simjoin_hits_program(
+        program = simjoin_hits_rows_program(
             sched_l, eps=eps, bp=bp, D=D, n_valid=n_valid
         )
         return launch(program, x, x, interpret=interpret)
@@ -266,7 +406,7 @@ def _join_pass1_fn(mesh, axis, *, eps, bp, D, n_valid, interpret):
         body,
         mesh=mesh,
         in_specs=(P(axis, None), P(None, None)),
-        out_specs=(P(axis, None), P(axis, None)),
+        out_specs=P(axis, None),
         check_rep=False,
     )
     return jax.jit(fn)
@@ -292,6 +432,161 @@ def _join_pass2_fn(mesh, axis, *, eps, bp, D, cap, p_pad, n_valid, interpret):
     return jax.jit(fn)
 
 
+# --- halo exchange: boundary strips instead of full replication ----------
+
+@register_schedule_cache
+@functools.lru_cache(maxsize=64)
+def _halo_pass1_fn(mesh, axis, *, eps, bp, D, n_valid, plan, interpret):
+    """Point-sharded pass 1: neighbour-exchange the boundary strips named
+    by the curve calculus, then count hits on resident+halo tiles.
+
+    ``plan`` is the static exchange topology — a tuple of ``(delta, m)``
+    ring entries: every shard sends ``m`` of its resident tiles (indices
+    in its send table) to the shard ``delta`` above it.  Returns the
+    per-row hit sums AND the assembled per-shard buffer so pass 2 reuses
+    it without a second exchange.
+    """
+    _, num = mesh_axis(mesh)
+
+    def body(sched_l, x_l, *send_idx):
+        xt = x_l.reshape(-1, bp, D)  # (ptl, bp, D) resident tiles
+        strips = []
+        for (delta, _m), idx in zip(plan, send_idx):
+            sel = jnp.take(xt, idx[0], axis=0)
+            pairs = [(j, j + delta) for j in range(num - delta)]
+            strips.append(jax.lax.ppermute(sel, axis, perm=pairs))
+        buf = jnp.concatenate([xt, *strips], axis=0) if strips else xt
+        buf = buf.reshape(-1, D)
+        program = simjoin_hits_rows_program(
+            sched_l, eps=eps, bp=bp, D=D, n_valid=n_valid, halo=True
+        )
+        return launch(program, buf, buf, interpret=interpret), buf
+
+    fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None))
+        + tuple(P(axis, None) for _ in plan),
+        out_specs=(P(axis, None), P(axis, None)),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+@register_schedule_cache
+@functools.lru_cache(maxsize=64)
+def _halo_pass2_fn(mesh, axis, *, eps, bp, D, cap, p_pad, n_valid, interpret):
+    def body(table_l, buf_l):
+        program = simjoin_emit_halo_program(
+            table_l, eps=eps, bp=bp, D=D, cap=cap, p_pad=p_pad,
+            n_valid=n_valid,
+        )
+        return launch(program, buf_l, buf_l, interpret=interpret)
+
+    fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None)),
+        out_specs=P(axis, None),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def _tile_reach(x, pt: int, bp: int, eps: float, sorted_keys: bool):
+    """Conservative bool[pt, pt] tile reach mask: False only where NO
+    point pair of the two tiles can be within ``eps``.
+
+    ``sorted_keys=True`` (points are Hilbert-sorted): per-tile sort-key
+    ranges + :func:`repro.core.neighbor_tile_mask` on the quantised grid
+    — the curve-neighbour calculus, with ε converted to cell widths plus
+    half a cell of float-quantisation slack.  Otherwise (arbitrary point
+    order, tiles are not spatially compact in general): per-tile bounding
+    boxes on ALL features, box gap ≤ ε (with a relative f32 slack for
+    the kernel's float distance).
+    """
+    x = np.asarray(x)
+    N, D = x.shape
+    if sorted_keys and min(D, 3) >= 2:
+        q, nb = _quantise_points(jnp.asarray(x))
+        qn = np.asarray(q, dtype=np.int64)
+        d = qn.shape[1]
+        keys = np.atleast_1d(np.asarray(hilbert_encode_nd(qn, nb)))
+        xf = x[:, :d].astype(np.float64)
+        span = np.maximum(xf.max(axis=0) - xf.min(axis=0), 1e-9)
+        radius = float(eps) * float((((1 << nb) - 1) / span).max()) + 0.5
+        # The tree walk is O(boundary cells), so at fine nbits a large ε
+        # names millions of cells.  Coarsen in d-level steps (the
+        # canonical codec is self-similar at multiples of d: high key
+        # bits ARE the coarse curve index) until the radius spans only a
+        # few cells.  Minimum cell gaps scale exactly by 2^s, so the
+        # coarse mask remains conservative — merely less selective.
+        s = 0
+        while nb - s > d and radius / (1 << s) > 4.0:
+            s += d
+        nb -= s
+        keys = keys >> (d * s)
+        radius = radius / (1 << s)
+        kr = np.empty((pt, 2), np.int64)
+        for t in range(pt):
+            a, b = t * bp, min((t + 1) * bp, N)
+            kr[t] = (keys[a], keys[b - 1]) if a < N else (1, 0)
+        return neighbor_tile_mask(kr, ndim=d, nbits=nb, radius=radius)
+    lo = np.full((pt, D), np.inf)
+    hi = np.full((pt, D), -np.inf)
+    for t in range(pt):
+        a, b = t * bp, min((t + 1) * bp, N)
+        if a < N:
+            lo[t], hi[t] = x[a:b].min(axis=0), x[a:b].max(axis=0)
+    live = lo[:, 0] != np.inf
+    eps_eff = float(eps) * (1.0 + 1e-5) + 1e-6
+    reach = np.eye(pt, dtype=bool)
+    for t in range(pt):
+        if not live[t]:
+            continue
+        g = np.maximum(np.maximum(lo[t][None, :] - hi, lo - hi[t][None, :]), 0)
+        reach[t] |= live & (np.sum(g * g, axis=1) <= eps_eff * eps_eff)
+    return reach | reach.T
+
+
+def _halo_plan(pruned: np.ndarray, ptl: int, num: int):
+    """Host-side exchange plan for a pruned triangle schedule.
+
+    Rows go to the shard owning their *i* tile; every foreign *j* tile is
+    a lower tile (``j <= i`` in the triangle), so strips only flow up the
+    ring.  Returns ``(row_ids, plan, send_tables, slots, n_buf_tiles)``:
+    per-shard row indices into ``pruned`` (global order preserved), the
+    static ``(delta, m)`` topology, per-delta int32[num, m] sender-local
+    tile tables, per-shard {global tile -> buffer slot} maps, and the
+    uniform per-shard buffer size in tiles (resident ``ptl`` + halo).
+    """
+    owner = pruned[:, 0] // ptl
+    row_ids = [np.nonzero(owner == s)[0] for s in range(num)]
+    need = []
+    for s in range(num):
+        tj = pruned[row_ids[s], 1]
+        need.append(sorted({int(t) for t in tj if t // ptl != s}))
+    plan, send_tables = [], []
+    slots: list[dict] = [dict() for _ in range(num)]
+    base = ptl
+    for delta in range(1, num):
+        per_dest = [
+            [t for t in need[s] if t // ptl == s - delta] for s in range(num)
+        ]
+        m = max(len(v) for v in per_dest)
+        if m == 0:
+            continue
+        tbl = np.zeros((num, m), np.int32)
+        for s in range(num):
+            for pos, t in enumerate(per_dest[s]):
+                tbl[s - delta, pos] = t - (s - delta) * ptl
+                slots[s][t] = base + pos
+        plan.append((delta, m))
+        send_tables.append(tbl)
+        base += m
+    return row_ids, tuple(plan), send_tables, slots, base
+
+
 def simjoin_pairs_sharded(
     x: jax.Array,
     eps: float,
@@ -300,18 +595,30 @@ def simjoin_pairs_sharded(
     curve: str = "hilbert",
     bp: int = 256,
     hilbert_order: bool = False,
+    halo: bool = True,
     interpret: bool | None = None,
+    _volume: dict | None = None,
 ) -> jax.Array:
     """Distributed two-pass ε-join pair emission.  int32[P, 2], i > j.
 
-    The triangle schedule's rows are curve-range partitioned across the
-    mesh (padded with zero-total sentinel rows to keep SPMD shapes
-    uniform): per-shard hit counts → global exclusive prefix sum on the
-    host (the inherent host sync of an exact-size join) → per-shard
-    emission at *local* offsets into per-shard buffers.  Concatenating
-    the shards' valid rows reproduces the single-core emission order
-    exactly, so the result is array-equal (not just set-equal) to
-    ``ops.simjoin_pairs``.
+    ``halo=True`` (default) is true distributed memory: x is
+    point-sharded (``P(axis, None)``), the triangle schedule is pruned
+    by the conservative tile-reach mask (curve-neighbour calculus on
+    Hilbert-sorted points, bounding-box gaps otherwise), each pruned row
+    runs on the shard owning its *i* tile, and the only cross-device
+    data motion is a ``ppermute`` of the boundary strips the reach mask
+    names — a fixed-size halo buffer per shard, reused by pass 2.
+    Per-shard hit counts → global exclusive prefix sum on the host (the
+    inherent host sync of an exact-size join) → per-shard emission at
+    *local* offsets → host gather back into the global schedule order.
+    Pruned rows contribute zero pairs by construction of the reach
+    mask, so the result is array-equal (not just set-equal) to
+    ``ops.simjoin_pairs`` on every mesh size.
+
+    ``halo=False`` retains the replicated path (x broadcast to every
+    shard, schedule rows curve-range partitioned, no collectives): the
+    baseline the halo differentials and the ``bytes_per_shard`` bench
+    rows compare against.
     """
     N, D = x.shape
     if N == 0:
@@ -327,8 +634,26 @@ def simjoin_pairs_sharded(
     n_valid = N if pn else None
     interp = resolve_interpret(interpret)
     axis, num = mesh_axis(mesh)
-
     tri = np.asarray(triangle_schedule(curve, pt, strict=False))
+    if halo:
+        pairs = _join_halo(
+            x, xp, float(eps), mesh=mesh, axis=axis, num=num, bp=bp, D=D,
+            pt=pt, n_valid=n_valid, tri=tri, sorted_keys=hilbert_order,
+            interp=interp, volume=_volume,
+        )
+    else:
+        pairs = _join_replicated(
+            x, xp, float(eps), mesh=mesh, axis=axis, num=num, bp=bp, D=D,
+            n_valid=n_valid, tri=tri, interp=interp, volume=_volume,
+        )
+    if perm is not None:
+        pairs = map_pairs_back(pairs, perm)
+    return pairs
+
+
+def _join_replicated(
+    x, xp, eps, *, mesh, axis, num, bp, D, n_valid, tri, interp, volume
+):
     steps = len(tri)
     # SPMD-uniform curve-range partition of the triangle schedule's rows
     per = int(np.diff(curve_partition(steps, num)).max())
@@ -339,17 +664,19 @@ def simjoin_pairs_sharded(
     )
 
     pass1 = _join_pass1_fn(
-        mesh, axis, eps=float(eps), bp=bp, D=D, n_valid=n_valid,
-        interpret=interp,
+        mesh, axis, eps=eps, bp=bp, D=D, n_valid=n_valid, interpret=interp,
     )
-    hits_i, _hits_j = pass1(jnp.asarray(tri_pad, dtype=jnp.int32), xp)
+    sched_dev = jnp.asarray(tri_pad, dtype=jnp.int32)
+    if volume is not None:
+        # the replicated path has no jaxpr collectives — its per-shard
+        # traffic is the P(None, None) broadcast of x into each pass
+        _acc_volume(volume, pass1, sched_dev, xp, replicated=xp.nbytes)
+    hits_i = pass1(sched_dev, xp)
     tot = np.asarray(jnp.sum(hits_i, axis=1)).astype(np.int64)[:steps]
     P_total = int(tot.sum())
     if P_total == 0:
         return jnp.zeros((0, 2), dtype=jnp.int32)
-    assert P_total + bp * bp < 2**31, (
-        f"pair count {P_total} overflows the int32 offsets"
-    )
+    check_pair_offsets(P_total, bp)
     cap = min(max(8, -(-int(tot.max()) // 8) * 8), bp * bp)
     offs = np.concatenate([[0], np.cumsum(tot)[:-1]])
     tot_pad = np.concatenate([tot, np.zeros(pad_rows, np.int64)])
@@ -365,7 +692,7 @@ def simjoin_pairs_sharded(
     # buffer (≈ mesh-size times smaller): past it, fall back to the dense
     # oracle (pair SET equal, lexicographic order — see ops.simjoin_pairs)
     probe = simjoin_emit_program(
-        table[:per], eps=float(eps), bp=bp, D=D, cap=cap, p_pad=p_pad,
+        table[:per], eps=eps, bp=bp, D=D, cap=cap, p_pad=p_pad,
         n_valid=n_valid,
     )
     from repro.core import fits_vmem
@@ -373,18 +700,154 @@ def simjoin_pairs_sharded(
     if not fits_vmem(probe, xp, xp):
         from . import ref
 
-        pairs = jnp.asarray(ref.simjoin_pairs(x, float(eps)))
-        return map_pairs_back(pairs, perm) if perm is not None else pairs
+        return jnp.asarray(ref.simjoin_pairs(x, eps))
 
     pass2 = _join_pass2_fn(
-        mesh, axis, eps=float(eps), bp=bp, D=D, cap=cap, p_pad=p_pad,
+        mesh, axis, eps=eps, bp=bp, D=D, cap=cap, p_pad=p_pad,
         n_valid=n_valid, interpret=interp,
     )
-    out = pass2(jnp.asarray(table), xp)  # (num * p_pad, 2)
+    table_dev = jnp.asarray(table)
+    if volume is not None:
+        _acc_volume(volume, pass2, table_dev, xp, replicated=xp.nbytes)
+    out = pass2(table_dev, xp)  # (num * p_pad, 2)
     parts = [
         out[s * p_pad : s * p_pad + int(shard_tot[s])] for s in range(num)
     ]
-    pairs = jnp.concatenate(parts, axis=0)
-    if perm is not None:
-        pairs = map_pairs_back(pairs, perm)
-    return pairs
+    return jnp.concatenate(parts, axis=0)
+
+
+def _join_halo(
+    x, xp, eps, *, mesh, axis, num, bp, D, pt, n_valid, tri, sorted_keys,
+    interp, volume
+):
+    # uniform resident layout: every shard owns ptl tiles (tail pure pad;
+    # pad tiles never appear in the schedule, so n_valid is untouched)
+    ptl = -(-pt // num)
+    ptg = ptl * num
+    xs = (
+        jnp.pad(xp, ((0, ptg * bp - xp.shape[0]), (0, 0)))
+        if ptg != pt else xp
+    )
+    reach = _tile_reach(np.asarray(x), pt, bp, eps, sorted_keys)
+    pruned = tri[reach[tri[:, 0], tri[:, 1]]]  # global FGF order kept
+    if len(pruned) == 0:
+        return jnp.zeros((0, 2), dtype=jnp.int32)
+    row_ids, plan, send_tables, slots, n_buf = _halo_plan(pruned, ptl, num)
+    per_h = max(1, max(len(r) for r in row_ids))
+    sched = np.zeros((num * per_h, 4), np.int32)
+    for s in range(num):
+        for r, g in enumerate(row_ids[s]):
+            ti, tj = int(pruned[g, 0]), int(pruned[g, 1])
+            js = tj - s * ptl if tj // ptl == s else slots[s][tj]
+            sched[s * per_h + r] = (ti - s * ptl, js, ti, tj)
+
+    pass1 = _halo_pass1_fn(
+        mesh, axis, eps=eps, bp=bp, D=D, n_valid=n_valid, plan=plan,
+        interpret=interp,
+    )
+    args1 = (jnp.asarray(sched), xs, *(jnp.asarray(t) for t in send_tables))
+    if volume is not None:
+        _acc_volume(volume, pass1, *args1)
+    hits, buf = pass1(*args1)
+    rows_tot = np.asarray(jnp.sum(hits, axis=1)).astype(np.int64)
+    tot = np.zeros(len(pruned), np.int64)
+    for s in range(num):
+        k = len(row_ids[s])
+        tot[row_ids[s]] = rows_tot[s * per_h : s * per_h + k]
+    P_total = int(tot.sum())
+    if P_total == 0:
+        return jnp.zeros((0, 2), dtype=jnp.int32)
+    check_pair_offsets(P_total, bp)
+    cap = min(max(8, -(-int(tot.max()) // 8) * 8), bp * bp)
+    shard_tot = np.array(
+        [int(tot[row_ids[s]].sum()) for s in range(num)], dtype=np.int64
+    )
+    p_pad = -(-(int(shard_tot.max()) + cap) // 8) * 8
+    start = np.zeros(len(pruned), np.int64)  # row start, global buffer coords
+    table = np.zeros((num * per_h, 6), np.int32)
+    for s in range(num):
+        k = len(row_ids[s])
+        rt = tot[row_ids[s]]
+        loff = np.zeros(k, np.int64)
+        if k:
+            loff[1:] = np.cumsum(rt)[:-1]
+        start[row_ids[s]] = s * p_pad + loff
+        table[s * per_h : s * per_h + k, :4] = sched[s * per_h : s * per_h + k]
+        table[s * per_h : s * per_h + k, 4] = loff
+        table[s * per_h : s * per_h + k, 5] = rt
+
+    # VMEM gate on the per-shard program; the operands are the per-shard
+    # resident+halo buffer, not the full point set
+    probe = simjoin_emit_halo_program(
+        table[:per_h], eps=eps, bp=bp, D=D, cap=cap, p_pad=p_pad,
+        n_valid=n_valid,
+    )
+    bufl = jax.ShapeDtypeStruct((n_buf * bp, D), xs.dtype)
+    from repro.core import fits_vmem
+
+    if not fits_vmem(probe, bufl, bufl):
+        from . import ref
+
+        return jnp.asarray(ref.simjoin_pairs(x, eps))
+
+    pass2 = _halo_pass2_fn(
+        mesh, axis, eps=eps, bp=bp, D=D, cap=cap, p_pad=p_pad,
+        n_valid=n_valid, interpret=interp,
+    )
+    table_dev = jnp.asarray(table)
+    if volume is not None:
+        _acc_volume(volume, pass2, table_dev, buf)
+    out = pass2(table_dev, buf)  # (num * p_pad, 2)
+    # gather the shards' windows back into the GLOBAL pruned-row order —
+    # which equals the full triangle order because pruned rows are
+    # provably pair-free — so the result is array-equal to single-core
+    nz = tot > 0
+    reps = tot[nz]
+    starts = start[nz]
+    csum = np.zeros(len(reps), np.int64)
+    csum[1:] = np.cumsum(reps)[:-1]
+    src = np.repeat(starts - csum, reps) + np.arange(int(reps.sum()))
+    return out[jnp.asarray(src)]
+
+
+# ---------------------------------------------------------------------------
+# Collective-volume accounting (bench rows; see launch.collective_volume)
+# ---------------------------------------------------------------------------
+
+def _acc_volume(vol: dict, fn, *args, replicated: int = 0) -> None:
+    v = collective_volume(fn, *args, replicated_bytes=replicated)
+    vol["bytes_per_shard"] = vol.get("bytes_per_shard", 0) + v["bytes_per_shard"]
+    vol["replicated_bytes"] = (
+        vol.get("replicated_bytes", 0) + v["replicated_bytes"]
+    )
+    counts = vol.setdefault("counts", {})
+    for k, n in v["counts"].items():
+        counts[k] = counts.get(k, 0) + n
+    bts = vol.setdefault("bytes", {})
+    for k, n in v["bytes"].items():
+        bts[k] = bts.get(k, 0) + n
+
+
+def simjoin_sharded_volume(
+    x: jax.Array,
+    eps: float,
+    *,
+    mesh,
+    curve: str = "hilbert",
+    bp: int = 256,
+    hilbert_order: bool = False,
+    halo: bool = True,
+    interpret: bool | None = None,
+) -> dict:
+    """Measured communication of one sharded ε-join call: executed
+    collective counts, per-primitive bytes, replicated-operand bytes and
+    their ``bytes_per_shard`` total.  Runs the join (pass-2 tables are
+    data-dependent) and accounts both passes.  The replicated path's
+    cost is its per-pass x broadcast; the halo path's is its boundary
+    ``ppermute`` strips — the bench rows CI compares."""
+    vol = {"bytes_per_shard": 0, "replicated_bytes": 0, "counts": {}, "bytes": {}}
+    simjoin_pairs_sharded(
+        x, eps, mesh=mesh, curve=curve, bp=bp, hilbert_order=hilbert_order,
+        halo=halo, interpret=interpret, _volume=vol,
+    )
+    return vol

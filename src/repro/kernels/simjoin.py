@@ -51,6 +51,20 @@ from repro.core.program import CurveProgram
 from .launch import launch
 
 
+def check_pair_offsets(P_total: int, bp: int) -> None:
+    """Raise if the join's pair total would overflow the int32 offset
+    columns of the emission table (``p_pad = P + cap ≤ P + bp²`` must be
+    int32-addressable).  A raised :class:`ValueError`, not ``assert`` —
+    the guard must survive ``python -O``.  Shared by the single-core and
+    both sharded emission paths."""
+    if P_total + bp * bp >= 2**31:
+        raise ValueError(
+            f"pair count {P_total} overflows the int32 offsets "
+            f"(P + bp^2 must stay below 2^31); reduce eps or join in "
+            f"chunks"
+        )
+
+
 def map_pairs_back(pairs: jax.Array, perm: jax.Array) -> jax.Array:
     """Map (i, j) pairs emitted on Hilbert-sorted points back to the
     original point ids, re-canonicalised to i > j (sorting can flip the
@@ -160,6 +174,53 @@ def simjoin_hits_program(
     )
 
 
+def _join_rows_kernel(
+    sched_ref, xi_ref, xj_ref, hi_out, *, eps2: float, n_valid: int | None,
+    gi_col: int, gj_col: int,
+):
+    s = pl.program_id(0)
+    hit = _hit_tile(
+        xi_ref[...], xj_ref[...], sched_ref[s, gi_col], sched_ref[s, gj_col],
+        eps2=eps2, n_valid=n_valid,
+    )
+    hi_out[0] = jnp.sum(hit.astype(jnp.int32), axis=1)
+
+
+def simjoin_hits_rows_program(
+    schedule, *, eps: float, bp: int, D: int, n_valid: int | None,
+    halo: bool = False,
+) -> CurveProgram:
+    """Pass-1 declaration emitting ONLY the per-step row sums — the pair
+    emission's prefix-sum input.  The sharded wrapper uses this instead
+    of :func:`simjoin_hits_program` so the shard_map never materialises
+    (or transfers) the unused column partials.
+
+    ``halo=False``: 2-col ``(i, j)`` schedule over one global point
+    buffer.  ``halo=True``: 4-col ``(i_slot, j_slot, i, j)`` schedule
+    over a shard's resident+halo buffer — the *slot* columns drive the
+    BlockSpec index maps (where a tile lives in the local buffer), the
+    *global* tile ids drive :func:`_hit_tile`'s diagonal strictness and
+    ragged-N masking, which are defined on global point indices.
+    """
+    steps = schedule.shape[0]
+    gi_col, gj_col = (2, 3) if halo else (0, 1)
+    return CurveProgram(
+        name="simjoin_hits_rows",
+        schedule=schedule,
+        kernel=functools.partial(
+            _join_rows_kernel, eps2=float(eps) ** 2, n_valid=n_valid,
+            gi_col=gi_col, gj_col=gj_col,
+        ),
+        in_specs=(
+            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 0], 0)),
+            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 1], 0)),
+        ),
+        out_specs=pl.BlockSpec((1, bp), lambda s, sr: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((steps, bp), jnp.int32),
+        columns=("i_slot", "j_slot", "i", "j") if halo else ("i", "j"),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("eps", "bp", "n_valid", "interpret"))
 def simjoin_counts_swizzled(
     schedule: jax.Array,
@@ -191,16 +252,15 @@ def simjoin_counts_swizzled(
 # Pass 2: pair emission at prefetched per-tile offsets
 # ---------------------------------------------------------------------------
 
-def _emit_kernel(
-    sched_ref, xi_ref, xj_ref, o_ref, *, eps2: float, n_valid: int | None,
+def _emit_tile(
+    xi, xj, ti, tj, off, tot, o_ref, *, eps2: float, n_valid: int | None,
     cap: int, bp: int,
 ):
-    s = pl.program_id(0)
-    ti = sched_ref[s, 0]
-    tj = sched_ref[s, 1]
-    off = sched_ref[s, 2]
-    tot = sched_ref[s, 3]
-    hit = _hit_tile(xi_ref[...], xj_ref[...], ti, tj, eps2=eps2, n_valid=n_valid)
+    """Shared emission body: recompute the hit tile, compact, masked-RMW a
+    cap-row window at ``off``.  ``ti``/``tj`` are GLOBAL tile ids (pair
+    indices and the hit mask are defined on global point indices); the
+    caller's BlockSpecs decide where ``xi``/``xj`` came from."""
+    hit = _hit_tile(xi, xj, ti, tj, eps2=eps2, n_valid=n_valid)
     # compact hit coordinates to the front: stable sort on the flattened
     # miss mask keeps hits first, in row-major in-tile order
     lin = jnp.where(hit.reshape(-1), 0, 1).astype(jnp.int32)
@@ -214,6 +274,30 @@ def _emit_kernel(
     # written back unchanged
     window = o_ref[pl.ds(off, cap), :]
     o_ref[pl.ds(off, cap), :] = jnp.where(valid, pairs, window)
+
+
+def _emit_kernel(
+    sched_ref, xi_ref, xj_ref, o_ref, *, eps2: float, n_valid: int | None,
+    cap: int, bp: int,
+):
+    s = pl.program_id(0)
+    _emit_tile(
+        xi_ref[...], xj_ref[...], sched_ref[s, 0], sched_ref[s, 1],
+        sched_ref[s, 2], sched_ref[s, 3], o_ref,
+        eps2=eps2, n_valid=n_valid, cap=cap, bp=bp,
+    )
+
+
+def _emit_halo_kernel(
+    sched_ref, xi_ref, xj_ref, o_ref, *, eps2: float, n_valid: int | None,
+    cap: int, bp: int,
+):
+    s = pl.program_id(0)
+    _emit_tile(
+        xi_ref[...], xj_ref[...], sched_ref[s, 2], sched_ref[s, 3],
+        sched_ref[s, 4], sched_ref[s, 5], o_ref,
+        eps2=eps2, n_valid=n_valid, cap=cap, bp=bp,
+    )
 
 
 @functools.partial(
@@ -271,4 +355,32 @@ def simjoin_emit_program(
         out_specs=pl.BlockSpec((p_pad, 2), lambda s, sr: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((p_pad, 2), jnp.int32),
         columns=("i", "j", "offset", "total"),
+    )
+
+
+def simjoin_emit_halo_program(
+    table, *, eps: float, bp: int, D: int, cap: int, p_pad: int,
+    n_valid: int | None,
+) -> CurveProgram:
+    """Pass-2 declaration for the halo-exchange join: 6-col rows
+    ``(i_slot, j_slot, i, j, offset, total)``.  Slot columns index a
+    shard's resident+halo point buffer, global tile ids produce the pair
+    indices, ``offset`` is shard-LOCAL (each shard owns its own
+    (p_pad, 2) buffer; the host re-gathers the shards' windows back into
+    the global schedule order).  Zero-``total`` sentinel rows never
+    write, so SPMD row padding is inert."""
+    return CurveProgram(
+        name="simjoin_emit_halo",
+        schedule=table,
+        kernel=functools.partial(
+            _emit_halo_kernel, eps2=float(eps) ** 2, n_valid=n_valid,
+            cap=cap, bp=bp,
+        ),
+        in_specs=(
+            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 0], 0)),
+            pl.BlockSpec((bp, D), lambda s, sr: (sr[s, 1], 0)),
+        ),
+        out_specs=pl.BlockSpec((p_pad, 2), lambda s, sr: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p_pad, 2), jnp.int32),
+        columns=("i_slot", "j_slot", "i", "j", "offset", "total"),
     )

@@ -184,6 +184,36 @@ class TestShardedKmeans:
             "psum": 1, "all_gather": 1}
         assert kmeans_sharded_collectives(x, 4, mesh=mesh, exact=False,
                                           **kw) == {"psum": 2}
+        # tree path on a power-of-two mesh: the counts psum plus one
+        # butterfly ppermute per doubling round
+        if num & (num - 1) == 0 and num > 1:
+            assert kmeans_sharded_collectives(
+                x, 4, mesh=mesh, reduce="tree", **kw
+            ) == {"psum": 1, "ppermute": int(np.log2(num))}
+
+    @pytest.mark.parametrize("num", MESH_SIZES + (3,))
+    def test_tree_reduce_bit_stable_and_allclose(self, num):
+        # the fixed-topology tree: same bits on repeated runs at every
+        # mesh size (incl. the non-power-of-two static pairwise fold),
+        # allclose — NOT necessarily bit-equal — to single-core
+        mesh = app_mesh(num)
+        x = jnp.asarray(RNG.normal(size=(96, 3)), jnp.float32)
+        kw = dict(iters=3, bp=16, bc=4, shard_reduce="tree", interpret=True)
+        c1, a1 = ops.kmeans_lloyd(x, 6, mesh=mesh, **kw)
+        c2, a2 = ops.kmeans_lloyd(x, 6, mesh=mesh, **kw)
+        assert_bit_equal(c1, c2, f"tree reduce unstable num={num}")
+        assert_bit_equal(a1, a2)
+        cs, _ = ops.kmeans_lloyd(x, 6, iters=3, bp=16, bc=4, interpret=True)
+        np.testing.assert_allclose(np.asarray(c1), np.asarray(cs),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_reduce_validates(self):
+        from repro.kernels.sharded import kmeans_lloyd_sharded
+
+        x = jnp.asarray(RNG.normal(size=(32, 3)), jnp.float32)
+        with pytest.raises(ValueError, match="reduce"):
+            kmeans_lloyd_sharded(x, 4, mesh=make_app_mesh(1),
+                                 reduce="ring", interpret=True)
 
 
 # ---------------------------------------------------------------------------
@@ -292,9 +322,146 @@ def test_mesh_helper_validates():
     with pytest.raises(ValueError):
         make_app_mesh(0)
     with pytest.raises(ValueError):
+        make_app_mesh(-3)
+    with pytest.raises(ValueError):
         make_app_mesh(len(jax.devices()) + 1)
     from repro.kernels.sharded import mesh_axis
 
     mesh = make_app_mesh(1)
     axis, num = mesh_axis(mesh)
     assert axis == "shards" and num == 1
+
+
+def test_mesh_axis_rejects_multiaxis():
+    from jax.sharding import Mesh
+
+    from repro.kernels.sharded import mesh_axis
+
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    with pytest.raises(ValueError, match="1-D mesh"):
+        mesh_axis(Mesh(dev, ("a", "b")))
+
+
+def test_curve_partition_more_shards_than_steps():
+    # num > steps: trailing shards own empty (but valid) ranges — the
+    # SPMD apps pad those shards with inert rows
+    bounds = curve_partition(3, 8)
+    sizes = np.diff(bounds)
+    assert bounds[0] == 0 and bounds[-1] == 3
+    assert (sizes >= 0).all() and sizes.sum() == 3
+    assert (sizes[3:] == 0).all()
+    with pytest.raises(ValueError):
+        curve_partition(3, 0)
+
+
+# ---------------------------------------------------------------------------
+# Halo exchange: point-sharded join vs replicated vs single-core
+# ---------------------------------------------------------------------------
+
+class TestHaloJoin:
+    @pytest.mark.parametrize("num", MESH_SIZES)
+    @pytest.mark.parametrize("hilbert_order", [False, True])
+    def test_halo_equals_replicated_and_single_core(self, num, hilbert_order):
+        from repro.kernels.sharded import simjoin_pairs_sharded
+
+        mesh = app_mesh(num)
+        x = jnp.asarray(RNG.uniform(size=(300, 2)), jnp.float32)
+        kw = dict(bp=32, hilbert_order=hilbert_order, interpret=True)
+        p0 = np.asarray(ops.simjoin_pairs(x, eps=0.07, **kw))
+        ph = np.asarray(simjoin_pairs_sharded(x, 0.07, mesh=mesh, halo=True,
+                                              **kw))
+        pr = np.asarray(simjoin_pairs_sharded(x, 0.07, mesh=mesh, halo=False,
+                                              **kw))
+        np.testing.assert_array_equal(p0, ph)
+        np.testing.assert_array_equal(p0, pr)
+
+    @pytest.mark.parametrize("num", MESH_SIZES)
+    def test_halo_edge_cases(self, num):
+        from repro.kernels.sharded import simjoin_pairs_sharded
+
+        mesh = app_mesh(num)
+        # N=1 / empty result / ε=0 duplicates, all through the halo path
+        x1 = jnp.asarray(RNG.normal(size=(1, 3)), jnp.float32)
+        assert simjoin_pairs_sharded(x1, 5.0, mesh=mesh, halo=True,
+                                     interpret=True).shape == (0, 2)
+        xd = jnp.asarray(np.array(
+            [[1, 2], [3, 4], [1, 2], [5, 6], [3, 4], [1, 2]], np.float32))
+        p1 = np.asarray(ops.simjoin_pairs(xd, eps=0.0, bp=4, interpret=True))
+        p2 = np.asarray(simjoin_pairs_sharded(xd, 0.0, mesh=mesh, bp=4,
+                                              halo=True, interpret=True))
+        np.testing.assert_array_equal(p1, p2)
+        xs = jnp.asarray(np.arange(40, dtype=np.float32).reshape(20, 2) * 100)
+        assert simjoin_pairs_sharded(xs, 0.1, mesh=mesh, bp=8, halo=True,
+                                     interpret=True).shape == (0, 2)
+
+    def test_halo_volume_below_replicated_and_sublinear(self):
+        # the tentpole's measurable claim: halo bytes/shard strictly under
+        # full replication, and sublinear in N at fixed point density
+        # (4× the points in 4× the area → ~2× the boundary, 4× the
+        # replication)
+        from repro.kernels.sharded import simjoin_sharded_volume
+
+        num = min(len(jax.devices()), 8)
+        if num < 2:
+            pytest.skip("needs a real mesh for cross-shard traffic")
+        mesh = make_app_mesh(num)
+        rng = np.random.default_rng(5)
+        vols = {}
+        for N, side in [(512, 1.0), (2048, 2.0)]:
+            x = jnp.asarray((rng.uniform(size=(N, 2)) * side), jnp.float32)
+            kw = dict(mesh=mesh, bp=64, hilbert_order=True, interpret=True)
+            vh = simjoin_sharded_volume(x, 0.05, halo=True, **kw)
+            vr = simjoin_sharded_volume(x, 0.05, halo=False, **kw)
+            assert vh["counts"].get("ppermute", 0) > 0
+            assert vr["counts"] == {}  # replication is the whole cost
+            assert 0 < vh["bytes_per_shard"] < vr["bytes_per_shard"]
+            vols[N] = (vh["bytes_per_shard"], vr["bytes_per_shard"])
+        halo_ratio = vols[2048][0] / vols[512][0]
+        repl_ratio = vols[2048][1] / vols[512][1]
+        assert repl_ratio == pytest.approx(4.0, rel=0.01)
+        assert halo_ratio < 3.0  # boundary-area scaling, not volume
+
+
+# ---------------------------------------------------------------------------
+# int32 offset overflow: raised, not assert (guards survive python -O)
+# ---------------------------------------------------------------------------
+
+class TestPairOffsetOverflow:
+    def test_single_core_raises(self, monkeypatch):
+        from repro.kernels import ops as ops_mod
+
+        def fake_hits(sched, xp, **kw):
+            steps = sched.shape[0]
+            bp = kw["bp"]
+            return jnp.full((steps, bp), 2**25, jnp.int32), None
+
+        monkeypatch.setattr(ops_mod, "simjoin_tile_hits_swizzled", fake_hits)
+        x = jnp.asarray(RNG.normal(size=(64, 3)), jnp.float32)
+        with pytest.raises(ValueError, match="overflow"):
+            ops_mod.simjoin_pairs(x, eps=0.5, bp=32, interpret=True)
+
+    @pytest.mark.parametrize("halo", [False, True])
+    def test_sharded_raises(self, halo, monkeypatch):
+        from repro.kernels import sharded
+
+        mesh = make_app_mesh(1)
+        x = jnp.asarray(RNG.normal(size=(64, 3)) * 0.1, jnp.float32)
+
+        if halo:
+            def fake_pass1(mesh, axis, **kw):
+                def fn(sched, xs, *tables):
+                    hits = jnp.full((sched.shape[0], kw["bp"]), 2**25,
+                                    jnp.int32)
+                    return hits, xs
+                return fn
+            monkeypatch.setattr(sharded, "_halo_pass1_fn", fake_pass1)
+        else:
+            def fake_pass1(mesh, axis, **kw):
+                def fn(sched, xp):
+                    return jnp.full((sched.shape[0], kw["bp"]), 2**25,
+                                    jnp.int32)
+                return fn
+            monkeypatch.setattr(sharded, "_join_pass1_fn", fake_pass1)
+        with pytest.raises(ValueError, match="overflow"):
+            sharded.simjoin_pairs_sharded(x, 0.5, mesh=mesh, bp=32,
+                                          halo=halo, interpret=True)

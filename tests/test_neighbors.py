@@ -1,0 +1,135 @@
+"""Curve-neighbour range calculus vs. brute-force oracle (PR 6 tentpole).
+
+The calculus must be EXACT at cell granularity: for every curve range
+and radius, the returned foreign intervals are precisely the cells whose
+box gap to the range is within the radius — proved here against an
+oracle that decodes the whole grid and tests all cell pairs.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    canonical_nbits,
+    curve_range_boxes,
+    halo_ranges,
+    halo_ranges_oracle,
+    hilbert_decode_nd,
+    hilbert_encode_nd,
+    neighbor_tile_mask,
+)
+
+
+def _cases(ndim, nbits, n_ranges=12, seed=0):
+    rng = np.random.default_rng(seed + 13 * ndim + nbits)
+    total = 1 << (ndim * canonical_nbits(nbits, ndim))
+    out = []
+    for _ in range(n_ranges):
+        a, b = sorted(rng.integers(0, total + 1, size=2).tolist())
+        out.append((a, b))
+    out += [(0, 1), (0, total), (total - 1, total), (5, 5)]
+    return out
+
+
+@pytest.mark.parametrize("ndim,nbits", [(2, 2), (2, 4), (3, 2), (3, 3)])
+def test_curve_range_boxes_cover_exactly(ndim, nbits):
+    nb = canonical_nbits(nbits, ndim)
+    total = 1 << (ndim * nb)
+    cells = hilbert_decode_nd(np.arange(total), ndim, nbits=nb)
+    for lo, hi in _cases(ndim, nbits):
+        boxes = curve_range_boxes(lo, hi, ndim=ndim, nbits=nbits)
+        covered = set()
+        for blo, bhi in boxes:
+            grids = np.meshgrid(
+                *[np.arange(blo[k], bhi[k] + 1) for k in range(ndim)],
+                indexing="ij",
+            )
+            pts = np.stack([g.ravel() for g in grids], axis=1)
+            vals = hilbert_encode_nd(pts, nb)
+            covered.update(np.atleast_1d(vals).tolist())
+        assert covered == set(range(lo, hi)), (ndim, nbits, lo, hi)
+        # pieces are disjoint: box volumes sum to the range length
+        vol = sum(int(np.prod(bhi - blo + 1)) for blo, bhi in boxes)
+        assert vol == hi - lo
+
+
+@pytest.mark.parametrize("ndim,nbits", [(2, 2), (2, 4), (3, 2)])
+@pytest.mark.parametrize("radius", [0.0, 1.0, 1.5, 3.0])
+def test_halo_ranges_match_oracle(ndim, nbits, radius):
+    for lo, hi in _cases(ndim, nbits, n_ranges=8):
+        got = halo_ranges(lo, hi, ndim=ndim, nbits=nbits, radius=radius)
+        want = halo_ranges_oracle(lo, hi, ndim=ndim, nbits=nbits, radius=radius)
+        assert np.array_equal(got, want), (ndim, nbits, radius, lo, hi)
+
+
+@pytest.mark.parametrize("ndim,nbits", [(2, 4), (3, 3)])
+def test_halo_ranges_properties(ndim, nbits):
+    total = 1 << (ndim * canonical_nbits(nbits, ndim))
+    for lo, hi in _cases(ndim, nbits):
+        ivs = halo_ranges(lo, hi, ndim=ndim, nbits=nbits, radius=2.0)
+        if lo >= hi:
+            assert len(ivs) == 0
+            continue
+        for s, e in ivs:
+            assert 0 <= s < e <= total
+            # foreign: never overlaps the owned range
+            assert e <= lo or s >= hi
+        # sorted and non-adjacent (maximally merged)
+        for (s0, e0), (s1, e1) in zip(ivs, ivs[1:]):
+            assert e0 < s1
+
+
+def test_halo_ranges_radius_monotone():
+    lo, hi = 7, 23
+    prev = set()
+    for r in (0.0, 1.0, 2.0, 4.0):
+        ivs = halo_ranges(lo, hi, ndim=2, nbits=3, radius=r)
+        cur = set()
+        for s, e in ivs:
+            cur.update(range(s, e))
+        assert prev <= cur
+        prev = cur
+
+
+def test_halo_ranges_validates():
+    with pytest.raises(ValueError):
+        halo_ranges(0, 1 << 20, ndim=2, nbits=2, radius=1.0)
+    with pytest.raises(ValueError):
+        halo_ranges(-1, 4, ndim=2, nbits=2, radius=1.0)
+    with pytest.raises(ValueError):
+        halo_ranges(0, 4, ndim=1, nbits=2, radius=1.0)
+
+
+def test_neighbor_tile_mask_covers_bruteforce():
+    """Tiles of a Hilbert-sorted quantised point set: the mask must
+    include every tile pair holding points whose cells are within the
+    radius of each other (the coverage contract the halo ε-join's
+    schedule pruning relies on)."""
+    rng = np.random.default_rng(3)
+    nbits, ndim, bp = 4, 2, 16
+    q = rng.integers(0, 1 << nbits, size=(128, ndim)).astype(np.int64)
+    keys = hilbert_encode_nd(q, nbits)
+    order = np.argsort(keys, kind="stable")
+    q, keys = q[order], keys[order]
+    T = len(q) // bp
+    kr = np.stack(
+        [[keys[t * bp], keys[(t + 1) * bp - 1]] for t in range(T)]
+    ).astype(np.int64)
+    for radius in (0.0, 1.2, 2.5):
+        mask = neighbor_tile_mask(kr, ndim=ndim, nbits=nbits, radius=radius)
+        assert np.array_equal(mask, mask.T) and mask.diagonal().all()
+        r2 = radius * radius
+        for t in range(T):
+            for u in range(T):
+                a, b = q[t * bp:(t + 1) * bp], q[u * bp:(u + 1) * bp]
+                d = np.abs(a[:, None, :] - b[None, :, :])
+                g = np.maximum(d - 1, 0).astype(np.float64)
+                if (np.sum(g * g, axis=2) <= r2).any():
+                    assert mask[t, u], (t, u, radius)
+
+
+def test_neighbor_tile_mask_empty_tiles():
+    kr = np.array([[0, 3], [4, 4], [1, 0]], dtype=np.int64)  # last is empty
+    mask = neighbor_tile_mask(kr, ndim=2, nbits=2, radius=1.0)
+    assert mask[2, 2] and not mask[2, 0] and not mask[0, 2]
