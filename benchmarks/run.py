@@ -6,6 +6,7 @@
   E4 bench_apps       — §7 k-means / simjoin / FW / Cholesky
   E5 bench_attention  — §6.2 jump-over on causal attention
   E5b bench_mesh      — beyond-paper Hilbert ICI layout
+  E6 bench_serving    — dense vs Hilbert-paged vs flash-paged decode
 
 Prints ``bench,name,value,derived`` CSV.  ``--json [PATH]`` additionally
 records the rows as JSON (default ``BENCH_curves.json``) so the perf
@@ -28,6 +29,7 @@ def main() -> None:
         bench_locality,
         bench_matmul,
         bench_mesh,
+        bench_serving,
     )
 
     modules = [
@@ -37,6 +39,7 @@ def main() -> None:
         ("apps", bench_apps),
         ("attention", bench_attention),
         ("mesh", bench_mesh),
+        ("serving", bench_serving),
     ]
     args = sys.argv[1:]
     json_path = None

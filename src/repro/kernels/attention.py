@@ -28,6 +28,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.schedule import register_schedule_cache
+
 from .pallas_compat import CompilerParams
 
 DEFAULT_MASK_VALUE = -0.7 * float(np.finfo(np.float32).max)
@@ -58,6 +60,7 @@ def full_schedule(qt: int, kt: int, *, serpentine: bool = True) -> np.ndarray:
 
 def _flash_kernel(
     sched_ref,
+    seq_ref,
     q_ref,
     k_ref,
     v_ref,
@@ -71,6 +74,7 @@ def _flash_kernel(
     bq: int,
     bkv: int,
     kv_valid: int | None,
+    varlen: bool,
 ):
     s = pl.program_id(1)
     first = sched_ref[s, 2]
@@ -102,6 +106,13 @@ def _flash_kernel(
         # q rows off the output)
         kv_pos = kv_tile * bkv + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
         scores = jnp.where(kv_pos < kv_valid, scores, DEFAULT_MASK_VALUE)
+
+    if varlen:
+        # per-sequence kv length (production padding masks, mirroring the
+        # cuDNN fused-attention surface): position >= seq_ref[bh] is pad
+        bh = pl.program_id(0)
+        kv_pos = kv_tile * bkv + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(kv_pos < seq_ref[bh], scores, DEFAULT_MASK_VALUE)
 
     m_prev = m_ref[:, 0:1]  # (bq, 1)
     m_cur = jnp.max(scores, axis=1, keepdims=True)
@@ -135,13 +146,20 @@ def flash_attention_swizzled(
     bq: int = 128,
     bkv: int = 128,
     kv_valid: int | None = None,
+    kv_seqlen: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Attention over (BH, S, D) tensors with a jump-over tile schedule.
 
     q/k/v: (BH, S, D) — batch*heads flattened (GQA expansion in ops.py).
     ``kv_valid``: true sequence length when S carries block padding; kv
-    positions >= kv_valid are masked out of the softmax.
+    positions >= kv_valid are masked out of the softmax (static — one
+    length for the whole batch).  ``kv_seqlen``: int32[BH] *per-sequence*
+    valid lengths (dynamic — a scalar-prefetch operand, so one compiled
+    program serves every padding pattern); q rows at positions >=
+    their sequence's length see an all-masked row and are undefined —
+    mask or slice them off (``ops.attention`` zeroes them via
+    ``q_seqlen``).
     """
     BH, S, D = q.shape
     assert k.shape == v.shape == (BH, S, D)
@@ -149,16 +167,22 @@ def flash_attention_swizzled(
     if sm_scale is None:
         sm_scale = 1.0 / float(np.sqrt(D))
     steps = schedule.shape[0]
+    varlen = kv_seqlen is not None
+    if not varlen:
+        # constant-arity prefetch: a dummy length operand keeps ONE kernel
+        # signature; varlen=False skips its mask entirely (bit-identical
+        # to the pre-varlen program)
+        kv_seqlen = jnp.full((BH,), S, dtype=jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(BH, steps),
         in_specs=[
-            pl.BlockSpec((1, bq, D), lambda bh, s, sr: (bh, sr[s, 0], 0)),
-            pl.BlockSpec((1, bkv, D), lambda bh, s, sr: (bh, sr[s, 1], 0)),
-            pl.BlockSpec((1, bkv, D), lambda bh, s, sr: (bh, sr[s, 1], 0)),
+            pl.BlockSpec((1, bq, D), lambda bh, s, sr, sq: (bh, sr[s, 0], 0)),
+            pl.BlockSpec((1, bkv, D), lambda bh, s, sr, sq: (bh, sr[s, 1], 0)),
+            pl.BlockSpec((1, bkv, D), lambda bh, s, sr, sq: (bh, sr[s, 1], 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, D), lambda bh, s, sr: (bh, sr[s, 0], 0)),
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, s, sr, sq: (bh, sr[s, 0], 0)),
         scratch_shapes=[
             pltpu.VMEM((bq, D), jnp.float32),
             pltpu.VMEM((bq, 128), jnp.float32),
@@ -168,7 +192,7 @@ def flash_attention_swizzled(
     return pl.pallas_call(
         functools.partial(
             _flash_kernel, sm_scale=sm_scale, causal=causal, bq=bq, bkv=bkv,
-            kv_valid=kv_valid,
+            kv_valid=kv_valid, varlen=varlen,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
@@ -176,4 +200,192 @@ def flash_attention_swizzled(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(schedule, q, k, v)
+    )(schedule, jnp.asarray(kv_seqlen, dtype=jnp.int32), q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# paged decode
+# ---------------------------------------------------------------------------
+
+def decode_page_schedule(
+    num_slots: int, max_pages: int, slot_order: tuple[int, ...] | None = None
+) -> np.ndarray:
+    """Schedule for the paged decode kernel: int32[steps, 4] rows of
+    (slot, logical_page, first, last).
+
+    Every slot visits its logical pages 0..max_pages-1 in order (the
+    online-softmax run per slot; first/last flag its boundaries).  Pages
+    past a slot's live length still appear — the kernel masks them by the
+    slot's position, so ONE static schedule serves every ragged fill
+    state (continuous batching: each slot is at a different depth).
+    Physical placement is the page table's job, not the schedule's: the
+    allocator lays (slot, page) out along the registry's Hilbert map
+    (:mod:`repro.serve.kv_pages`), so this logical walk gathers few,
+    long physical runs.
+    """
+    order = range(num_slots) if slot_order is None else slot_order
+    rows = []
+    for slot in order:
+        for lp in range(max_pages):
+            rows.append(
+                (slot, lp, 1 if lp == 0 else 0, 1 if lp == max_pages - 1 else 0)
+            )
+    return np.asarray(rows, dtype=np.int32)
+
+
+@register_schedule_cache
+@functools.lru_cache(maxsize=64)
+def _decode_page_schedule_cached(
+    num_slots: int, max_pages: int, slot_order: tuple[int, ...] | None = None
+) -> np.ndarray:
+    return decode_page_schedule(num_slots, max_pages, slot_order)
+
+
+def decode_page_schedule_device(
+    num_slots: int, max_pages: int, slot_order: tuple[int, ...] | None = None
+) -> jax.Array:
+    """LRU-cached :func:`decode_page_schedule` as a device array.  Only
+    the host table is cached — the upload happens per call so a first
+    call inside a jit/scan trace never pins a tracer in the cache (the
+    decode step is always jitted, where the table constant-folds)."""
+    return jnp.asarray(
+        _decode_page_schedule_cached(num_slots, max_pages, slot_order),
+        dtype=jnp.int32,
+    )
+
+
+def _flash_decode_kernel(
+    sched_ref,
+    pt_ref,
+    pos_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    sm_scale: float,
+    page_size: int,
+):
+    s = pl.program_id(1)
+    slot = sched_ref[s, 0]
+    lp = sched_ref[s, 1]
+    first = sched_ref[s, 2]
+    last = sched_ref[s, 3]
+
+    @pl.when(first == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (g, Dk)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (ps, Dk)
+    v = v_ref[0, :, 0].astype(jnp.float32)  # (ps, Dv)
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+
+    # per-slot ragged masking: the token at pos[slot] is already written
+    # (decode writes the new K/V entry before attending, like the dense
+    # path), so <= is the inclusive bound.  Everything past it — the tail
+    # of the current page, stale contents of a recycled page, and whole
+    # unallocated pages (their table entries point at the reserved trash
+    # page 0) — is masked out of the softmax.
+    kv_pos = lp * page_size + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(kv_pos <= pos_ref[slot], scores, DEFAULT_MASK_VALUE)
+
+    m_prev = m_ref[:, 0:1]  # (g, 1)
+    m_cur = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(scores - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[:, 0:1] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(last == 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[:, 0:1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def flash_attention_decode(
+    schedule: jax.Array,
+    page_table: jax.Array,
+    pos: jax.Array,
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    *,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """One decode step of attention against a PAGED KV cache.
+
+    q: (B, Hkv, g, Dk) — the B slots' single-token queries, grouped GQA
+    layout (g = H // Hkv query heads share each KV head; MLA passes
+    Hkv=1, g=H and its concatenated latent ⊕ rope width as Dk).
+    k_pages/v_pages: (P, page_size, Hkv, Dk/Dv) physical page pools.
+    page_table: int32[B, max_pages] logical→physical page map (dynamic —
+    scalar-prefetched, so allocation churn never recompiles).
+    pos: int32[B] per-slot positions; the entry at pos is live, later
+    positions are masked.  schedule: :func:`decode_page_schedule`.
+
+    Grid is (Hkv, steps); each schedule step DMAs exactly one physical
+    page per pool — the index map reads the page table, so the gather's
+    HBM access stream IS the allocator's physical layout.  Returns
+    (B, Hkv, g, Dv).
+    """
+    B, Hkv, g, Dk = q.shape
+    P, ps, Hkv_k, Dk_k = k_pages.shape
+    Dv = v_pages.shape[-1]
+    assert (Hkv_k, Dk_k) == (Hkv, Dk), (k_pages.shape, q.shape)
+    assert v_pages.shape[:3] == (P, ps, Hkv), v_pages.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / float(np.sqrt(Dk))
+    steps = schedule.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(Hkv, steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, Dk), lambda h, s, sr, pt, pv: (sr[s, 0], h, 0, 0)),
+            pl.BlockSpec(
+                (1, ps, 1, Dk),
+                lambda h, s, sr, pt, pv: (pt[sr[s, 0], sr[s, 1]], 0, h, 0),
+            ),
+            pl.BlockSpec(
+                (1, ps, 1, Dv),
+                lambda h, s, sr, pt, pv: (pt[sr[s, 0], sr[s, 1]], 0, h, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, Dv), lambda h, s, sr, pt, pv: (sr[s, 0], h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, Dv), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_flash_decode_kernel, sm_scale=sm_scale, page_size=ps),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, Dv), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        schedule,
+        jnp.asarray(page_table, dtype=jnp.int32),
+        jnp.asarray(pos, dtype=jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+    )

@@ -26,6 +26,15 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--paged", action="store_true",
+                    help="Hilbert-paged KV cache instead of the dense (B, S) cache")
+    ap.add_argument("--attn", choices=("flash", "xla"), default="flash",
+                    help="paged decode attention: Pallas kernel or XLA gather")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--page-layout", choices=("hilbert", "naive"), default="hilbert")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--hilbert-admission", action="store_true",
+                    help="order each admitted cohort by Hilbert token rank")
     args = ap.parse_args()
 
     if "decode_32k" not in applicable_shapes(args.arch):
@@ -34,7 +43,11 @@ def main() -> None:
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
     engine = ServeEngine(cfg, params, num_slots=args.slots,
-                         max_len=args.max_len, temperature=args.temperature)
+                         max_len=args.max_len, temperature=args.temperature,
+                         paged=args.paged, attn_impl=args.attn,
+                         page_size=args.page_size, page_layout=args.page_layout,
+                         prefill_chunk=args.prefill_chunk,
+                         hilbert_admission=args.hilbert_admission)
 
     rng = np.random.default_rng(0)
     reqs = []

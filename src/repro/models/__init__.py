@@ -5,8 +5,10 @@ from .model import (
     cache_specs,
     count_params,
     decode_step,
+    decode_step_paged,
     forward,
     init_cache,
+    init_paged_cache,
     init_params,
     loss_fn,
     param_count_analytic,
@@ -20,8 +22,10 @@ __all__ = [
     "cache_specs",
     "count_params",
     "decode_step",
+    "decode_step_paged",
     "forward",
     "init_cache",
+    "init_paged_cache",
     "init_params",
     "loss_fn",
     "param_count_analytic",

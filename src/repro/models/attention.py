@@ -266,6 +266,81 @@ def gqa_decode(params, x, cfg: ModelConfig, cache, pos):
 
 
 # ---------------------------------------------------------------------------
+# paged decode (GQA)
+# ---------------------------------------------------------------------------
+#
+# The serving cache is a physical page pool (P, page_size, Hkv, D) shared
+# by all slots, addressed through an int32[B, max_pages] page table
+# (see repro.serve.kv_pages).  Physical page 0 is the reserved trash
+# page: unallocated table entries point at it, and writes from masked
+# (inactive) slots are *diverted* into it so the per-step scatter needs
+# no branch and no post-hoc where-merge over the pool.  Gathers never
+# branch either — the attention mask is positional (kv_pos <= pos), so
+# whatever garbage the trash page holds is multiplied by exactly zero.
+
+def _paged_write(pages, new, page_table, pos, write_mask):
+    """Scatter one token per slot into the physical pool.
+
+    pages: (P, ps, Hkv, D); new: (B, Hkv, D); pos: int32[B].  Slots with
+    ``write_mask == False`` write to the trash page instead (scatter
+    collisions inside page 0 are harmless — it is never attended)."""
+    ps = pages.shape[1]
+    B = pos.shape[0]
+    rows = jnp.arange(B, dtype=jnp.int32)
+    phys = page_table[rows, pos // ps]
+    if write_mask is not None:
+        phys = jnp.where(write_mask, phys, 0)
+    return pages.at[phys, pos % ps].set(new.astype(pages.dtype))
+
+
+def gqa_init_pages(cfg: ModelConfig, num_pages: int, page_size: int, dtype):
+    hkv, dh = cfg.num_kv_heads, cfg.attn_head_dim
+    return {
+        "k_pages": jnp.zeros((num_pages, page_size, hkv, dh), dtype),
+        "v_pages": jnp.zeros((num_pages, page_size, hkv, dh), dtype),
+    }
+
+
+def gqa_decode_paged(params, x, cfg: ModelConfig, pools, pos, page_table, *,
+                     write_mask=None, attn_impl: str = "flash"):
+    """Single-token GQA decode against a paged cache.
+
+    x: (B, 1, d); pos: int32[B]; page_table: int32[B, max_pages].
+    attn_impl="flash" runs the grouped Pallas decode kernel natively on
+    (B, Hkv, g) queries — no head expansion; "xla" gathers the pages
+    and runs the retained ``_sdpa`` (the differential reference).
+    Returns (out, pools)."""
+    B = x.shape[0]
+    q, k, v = _qkv(params, x, cfg)
+    pos_arr = pos[:, None]
+    q = apply_rope(q, pos_arr, cfg.rope_theta)
+    k = apply_rope(k, pos_arr, cfg.rope_theta)
+    pools = {
+        "k_pages": _paged_write(pools["k_pages"], k[:, 0], page_table, pos, write_mask),
+        "v_pages": _paged_write(pools["v_pages"], v[:, 0], page_table, pos, write_mask),
+    }
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.attn_head_dim
+    if attn_impl == "flash":
+        from repro.kernels import ops as kops
+
+        qg = q[:, 0].reshape(B, Hkv, H // Hkv, Dh)
+        out = kops.attention_decode(
+            qg, pools["k_pages"], pools["v_pages"], page_table, pos,
+            sm_scale=1.0 / np.sqrt(Dh),
+        )
+        out = out.reshape(B, 1, H * Dh).astype(x.dtype)
+    else:
+        ps = pools["k_pages"].shape[1]
+        MP = page_table.shape[1]
+        k_all = pools["k_pages"][page_table].reshape(B, MP * ps, Hkv, Dh)
+        v_all = pools["v_pages"][page_table].reshape(B, MP * ps, Hkv, Dh)
+        valid = jnp.arange(MP * ps, dtype=jnp.int32)[None] <= pos[:, None]
+        out = _sdpa(q, k_all, v_all, causal=False, kv_len_mask=valid)
+        out = out.reshape(B, 1, -1)
+    return out @ params["wo"], pools
+
+
+# ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2 multi-head latent attention)
 # ---------------------------------------------------------------------------
 
@@ -432,3 +507,77 @@ def mla_decode(params, x, cfg: ModelConfig, cache, pos):
     ctx = jnp.einsum("bhqk,bkr->bqhr", p, cache["c_kv"].astype(jnp.float32))
     out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_v.astype(jnp.float32)).astype(x.dtype)
     return out.reshape(B, 1, -1) @ params["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# paged decode (MLA)
+# ---------------------------------------------------------------------------
+
+def mla_init_pages(cfg: ModelConfig, num_pages: int, page_size: int, dtype):
+    """MLA pages the *compressed* latent: one pool leaf of width
+    kv_lora_rank + qk_rope_head_dim per position (c_kv ⊕ k_rope), with a
+    singleton kv-head axis so the pool shape matches the decode kernel's
+    (P, ps, Hkv, D) contract."""
+    w = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+    return {"kv_pages": jnp.zeros((num_pages, page_size, 1, w), dtype)}
+
+
+def mla_decode_paged(params, x, cfg: ModelConfig, pools, pos, page_table, *,
+                     write_mask=None, attn_impl: str = "flash"):
+    """Absorbed-weight MLA decode against the paged compressed cache.
+
+    MLA maps onto the grouped decode kernel with Hkv=1, g=num_heads:
+    the latent pool (c_kv ⊕ k_rope) is passed as BOTH k_pages and
+    v_pages — scores are q_lat·c_kv + q_rope·k_rope over the full
+    r+dr width, the weighted value accumulates the same pool, and the
+    context is sliced back to the first kv_lora_rank columns before the
+    w_v expansion (the extra dr columns cost one slice, not a second
+    pool).  Returns (out, pools)."""
+    B = x.shape[0]
+    h = cfg.num_heads
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    pos_arr = pos[:, None]
+    q_nope, q_rope = _mla_q(params, x, cfg, pos_arr)  # (B,1,h,*)
+    c_kv_new, k_rope_new = _mla_ckv(params, x, cfg, pos_arr)
+    new = jnp.concatenate([c_kv_new[:, 0], k_rope_new[:, 0]], axis=-1)
+    pools = {
+        "kv_pages": _paged_write(
+            pools["kv_pages"], new[:, None, :], page_table, pos, write_mask
+        )
+    }
+    wkv_b = params["wkv_b"].reshape(r, h, cfg.qk_nope_head_dim + cfg.v_head_dim)
+    w_nope = wkv_b[:, :, : cfg.qk_nope_head_dim]
+    w_v = wkv_b[:, :, cfg.qk_nope_head_dim :]
+    q_lat = jnp.einsum(
+        "bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_nope.astype(jnp.float32)
+    )
+    scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    if attn_impl == "flash":
+        from repro.kernels import ops as kops
+
+        q_full = jnp.concatenate([q_lat, q_rope.astype(jnp.float32)], axis=-1)
+        qg = q_full[:, 0][:, None]  # (B, Hkv=1, g=h, r+dr)
+        ctx = kops.attention_decode(
+            qg, pools["kv_pages"], pools["kv_pages"], page_table, pos,
+            sm_scale=float(scale),
+        )
+        ctx = ctx[:, 0, :, :r]  # (B, h, r): drop the k_rope columns
+        out = jnp.einsum("bhr,rhd->bhd", ctx, w_v.astype(jnp.float32))
+        out = out[:, None].astype(x.dtype)  # (B,1,h,dv)
+    else:
+        ps = pools["kv_pages"].shape[1]
+        MP = page_table.shape[1]
+        kv_all = pools["kv_pages"][page_table].reshape(B, MP * ps, r + dr)
+        c_all, kr_all = kv_all[..., :r], kv_all[..., r:]
+        scores = (
+            jnp.einsum("bqhr,bkr->bhqk", q_lat, c_all.astype(jnp.float32))
+            + jnp.einsum(
+                "bqhd,bkd->bhqk", q_rope.astype(jnp.float32), kr_all.astype(jnp.float32)
+            )
+        ) * scale
+        valid = (jnp.arange(MP * ps, dtype=jnp.int32)[None] <= pos[:, None])[:, None, None]
+        scores = jnp.where(valid, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkr->bqhr", p, c_all.astype(jnp.float32))
+        out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_v.astype(jnp.float32)).astype(x.dtype)
+    return out.reshape(B, 1, -1) @ params["wo"], pools

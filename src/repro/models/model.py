@@ -168,6 +168,40 @@ def decode_step(params, tokens, cache, pos, cfg: ModelConfig):
     return logits, out_cache
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Paged decode cache: one physical pool per layer, one page table
+    shared by all layers (managed host-side by serve.kv_pages).  Pool
+    leaves are (L, num_pages, page_size, Hkv, D)."""
+    dtype = cfg.params_dtype
+    one = tfm.block_init_pages(cfg, num_pages, page_size, dtype)
+    pools = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), one
+    )
+    return {"blocks": pools}
+
+
+def decode_step_paged(params, tokens, cache, pos, page_table, cfg: ModelConfig,
+                      *, write_mask=None, attn_impl: str = "flash"):
+    """Paged twin of :func:`decode_step`.  page_table: int32[B, max_pages]
+    (entry 0 = trash page); write_mask: bool[B] or None — False slots
+    divert their cache write to the trash page (inactive continuous-
+    batching slots).  Returns (logits (B, V) f32, new cache)."""
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (tokens.shape[0],))
+    if cfg.embed_inputs:
+        x = embed(tokens, params["embed"])
+    else:
+        x = tokens
+    x, new_pools = tfm.stack_decode_paged(
+        params["blocks"], x, cfg, cache["blocks"], pos, page_table,
+        write_mask=write_mask, attn_impl=attn_impl,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("head") or params["embed"]
+    logits = unembed(x, head)[:, 0]
+    return logits, {"blocks": new_pools}
+
+
 def count_params(params) -> int:
     return int(sum(x.size for x in jax.tree.leaves(params)))
 

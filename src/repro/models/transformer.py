@@ -106,6 +106,45 @@ def block_decode(params, x, cfg: ModelConfig, cache, pos):
     return x, cache
 
 
+def block_decode_paged(params, x, cfg: ModelConfig, pools, pos, page_table, *,
+                       write_mask=None, attn_impl: str = "flash"):
+    """Single-token step against a paged KV pool.  Returns (x, pools).
+
+    Only pure attention stacks page — mamba2/hybrid carry O(1) recurrent
+    state per slot, so there is nothing to page (the dense decode path
+    remains the serving route for those archs)."""
+    kind = cfg.block_kind
+    if kind == "mamba2":
+        raise NotImplementedError("recurrent blocks have no paged KV cache")
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    if cfg.is_mla:
+        y, pools = attn.mla_decode_paged(
+            params["attn"], h, cfg, pools, pos, page_table,
+            write_mask=write_mask, attn_impl=attn_impl,
+        )
+    else:
+        y, pools = attn.gqa_decode_paged(
+            params["attn"], h, cfg, pools, pos, page_table,
+            write_mask=write_mask, attn_impl=attn_impl,
+        )
+    x = x + y
+    h = rms_norm(x, params["norm2"], cfg.norm_eps)
+    if kind == "moe":
+        y, _ = moe_mod.moe_forward(params["ffn"], h, cfg)
+        x = x + y
+    else:
+        x = x + mlp(h, params["ffn"], cfg.mlp_act)
+    return x, pools
+
+
+def block_init_pages(cfg: ModelConfig, num_pages: int, page_size: int, dtype):
+    if cfg.block_kind == "mamba2" or cfg.hybrid_attn_every:
+        raise ValueError("paged KV serving requires a pure attention stack")
+    if cfg.is_mla:
+        return attn.mla_init_pages(cfg, num_pages, page_size, dtype)
+    return attn.gqa_init_pages(cfg, num_pages, page_size, dtype)
+
+
 def block_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     if cfg.block_kind == "mamba2":
         return ssm_mod.mamba2_init_cache(cfg, batch, dtype)
@@ -212,6 +251,29 @@ def stack_decode(stacked, x, cfg: ModelConfig, caches, pos, shared_attn=None,
     caches_out = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_parts)
     shared_out = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_shared)
     return x, caches_out, shared_out
+
+
+def stack_decode_paged(stacked, x, cfg: ModelConfig, pools, pos, page_table, *,
+                       write_mask=None, attn_impl: str = "flash"):
+    """Single-token paged decode through all layers.  The page table is
+    shared by every layer (one logical→physical map, L pools).
+    Returns (x, pools)."""
+    if cfg.hybrid_attn_every:
+        raise ValueError("paged KV serving requires a pure attention stack")
+
+    def scan_fn(x, inp):
+        layer_params, pool = inp
+        x, new_pool = block_decode_paged(
+            layer_params, x, cfg, pool, pos, page_table,
+            write_mask=write_mask, attn_impl=attn_impl,
+        )
+        return x, new_pool
+
+    x, new_pools = jax.lax.scan(
+        scan_fn, x, (stacked, pools),
+        unroll=cfg.num_layers if cfg.scan_unroll else 1,
+    )
+    return x, new_pools
 
 
 def init_shared_attn(key, cfg: ModelConfig, dtype):

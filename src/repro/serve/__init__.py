@@ -1,3 +1,4 @@
 from .engine import ServeEngine
+from .kv_pages import PagedKVCache
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "PagedKVCache"]

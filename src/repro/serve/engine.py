@@ -5,37 +5,65 @@ requests are attached to free slots with their own position counters
 (the per-slot ``pos`` vector the model's decode path supports), so new
 requests join mid-flight without draining the batch — continuous batching.
 
-Prefill is chunk-free here (token-by-token through the decode path, which
-is exact) — the compiled ``forward`` prefill + cache scatter is the
-production path for long prompts and is what the ``prefill_32k`` dry-run
-cell lowers.
+Three cache/attention modes, all greedy-token-identical (differentially
+tested in tests/test_serving_decode.py):
+
+  * dense (``paged=False``)          — the retained XLA reference: one
+    ``(B, max_len)`` cache, masked slots kept by a where-merge;
+  * paged + ``attn_impl="xla"``      — pages gathered through the table,
+    attention still XLA (the paged reference oracle);
+  * paged + ``attn_impl="flash"``    — the Pallas grouped decode kernel
+    gathers K/V page-by-page through the table (no (B, S) gather ever
+    materialises).
+
+Paged mode replaces the per-slot where-merge with *trash-page write
+diversion* (masked slots scatter into reserved physical page 0, see
+serve/kv_pages.py), so the pool buffers are donated through the step —
+no copy of the cache per tick.  Page-id → memory layout follows the
+registry's Hilbert map over (slot, page): co-scheduled slots' pages
+cluster, so the per-step gather stream decomposes into few long runs
+(the paper's locality claim applied to serving; measured by
+``PagedKVCache.gather_runs`` in benchmarks/bench_serving.py).
+
+Prefill is *chunked*: ``prefill_chunk`` prompt tokens advance in ONE
+dispatch (a lax.scan of masked single-token decode steps — exact, and
+``chunk``× fewer dispatches than the old token-by-token loop).  The
+compiled ``forward`` prefill + cache scatter remains the production
+path for very long prompts (the ``prefill_32k`` dry-run cell).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import deque
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import ModelConfig, decode_step, init_cache
+from repro.models import (
+    ModelConfig,
+    decode_step,
+    decode_step_paged,
+    init_cache,
+    init_paged_cache,
+)
+from .kv_pages import PagedKVCache
+
+# All step functions are module-level jits (cfg static/hashable) so every
+# engine over the same config shares ONE compiled executable.  Per-engine
+# closures re-jitted per instance, and two XLA compilations of the same
+# jaxpr are not guaranteed instruction-schedule-identical — their logits
+# could differ in the last ulp, which is exactly the cross-program argmax
+# flip the serving differential tests kept tripping over (and a waste of
+# compile time in production).
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _masked_step(params, toks, cache, pos, mask, *, cfg):
     """Decode one token; slots with mask=False keep their cache untouched
-    (recurrent SSM states must not see filler tokens).
-
-    Module-level jit (cfg is static/hashable) so every engine over the
-    same config shares ONE compiled executable.  The per-engine closure
-    this replaces re-jitted per instance, and two XLA compilations of
-    the same jaxpr are not guaranteed instruction-schedule-identical —
-    their logits could differ in the last ulp, which is exactly the
-    cross-program argmax flip the serving differential tests kept
-    tripping over (and a waste of compile time in production).
-    """
+    (recurrent SSM states must not see filler tokens)."""
     logits, new_c = decode_step(params, toks, cache, pos, cfg)
 
     def merge(old, new):
@@ -43,6 +71,71 @@ def _masked_step(params, toks, cache, pos, mask, *, cfg):
         return jnp.where(m, new, old)
 
     return logits, jax.tree.map(merge, cache, new_c)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "attn_impl"), donate_argnums=(2,)
+)
+def _masked_step_paged(params, toks, cache, pos, mask, page_table, *, cfg, attn_impl):
+    """Paged twin of :func:`_masked_step`.  No where-merge: masked slots'
+    cache writes are diverted to the trash page inside the scatter, so
+    the pool buffers are donated — the step never copies the cache."""
+    return decode_step_paged(
+        params, toks, cache, pos, page_table, cfg,
+        write_mask=mask, attn_impl=attn_impl,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _masked_chunk_step(params, toks, mask, cache, pos, *, cfg):
+    """Chunked prefill: advance each slot by its masked tokens in ONE
+    dispatch.  toks/mask: (B, C); a lax.scan of C masked single-token
+    decode steps (exact — same math as the token-by-token loop).
+    Returns (cache, pos)."""
+
+    def body(carry, inp):
+        cache, pos = carry
+        t, m = inp
+        _, new_c = decode_step(params, t[:, None], cache, pos, cfg)
+
+        def merge(old, new):
+            mm = m.reshape((1, -1) + (1,) * (old.ndim - 2))
+            return jnp.where(mm, new, old)
+
+        cache = jax.tree.map(merge, cache, new_c)
+        return (cache, pos + m.astype(jnp.int32)), None
+
+    (cache, pos), _ = jax.lax.scan(body, (cache, pos), (toks.T, mask.T))
+    return cache, pos
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "attn_impl"), donate_argnums=(3,)
+)
+def _masked_chunk_step_paged(params, toks, mask, cache, pos, page_table, *,
+                             cfg, attn_impl):
+    """Chunked prefill against the paged cache (trash-diverted writes in
+    place of the merge).  Returns (cache, pos)."""
+
+    def body(carry, inp):
+        cache, pos = carry
+        t, m = inp
+        _, cache = decode_step_paged(
+            params, t[:, None], cache, pos, page_table, cfg,
+            write_mask=m, attn_impl=attn_impl,
+        )
+        return (cache, pos + m.astype(jnp.int32)), None
+
+    (cache, pos), _ = jax.lax.scan(body, (cache, pos), (toks.T, mask.T))
+    return cache, pos
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _zero_slot(cache, slot):
+    """Zero ONE slot's rows across the cache pytree (slot is a traced
+    scalar — one executable serves every slot).  With donation this is
+    an in-place O(slot-row) scatter, not an O(cache) rebuild."""
+    return jax.tree.map(lambda x: x.at[:, slot].set(jnp.zeros_like(x[:1, 0])), cache)
 
 
 @dataclasses.dataclass
@@ -64,22 +157,50 @@ class ServeEngine:
         max_len: int = 256,
         temperature: float = 0.0,
         seed: int = 0,
+        paged: bool = False,
+        attn_impl: str = "flash",
+        page_size: int = 16,
+        num_pages: int | None = None,
+        page_layout: str = "hilbert",
+        prefill_chunk: int = 8,
+        hilbert_admission: bool = False,
     ):
         assert not cfg.encoder_only, "encoder-only archs have no decode path"
+        if attn_impl not in ("flash", "xla"):
+            raise ValueError(f"attn_impl {attn_impl!r}; one of ('flash', 'xla')")
+        if paged and (cfg.block_kind == "mamba2" or cfg.hybrid_attn_every):
+            raise ValueError(
+                "paged serving requires a pure attention stack "
+                "(recurrent blocks carry O(1) state — nothing to page)"
+            )
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
         self.temperature = temperature
-        self.cache = init_cache(cfg, num_slots, max_len)
+        self.paged = paged
+        self.attn_impl = attn_impl
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.hilbert_admission = hilbert_admission
+        if paged:
+            self.page_size = page_size
+            self.max_pages = -(-max_len // page_size)
+            self.kv_pages = PagedKVCache(
+                num_slots, self.max_pages, page_size,
+                num_pages=num_pages, layout=page_layout,
+            )
+            self.cache = init_paged_cache(cfg, self.kv_pages.num_pages, page_size)
+        else:
+            self.kv_pages = None
+            self.cache = init_cache(cfg, num_slots, max_len)
         self.pos = np.zeros((num_slots,), dtype=np.int32)
         self.slot_req: list[Request | None] = [None] * num_slots
         self.next_token = np.zeros((num_slots,), dtype=np.int32)
         self.active = np.zeros((num_slots,), dtype=bool)
         self.key = jax.random.PRNGKey(seed)
         self._rid = 0
-        self._queue: list[Request] = []
-        self._step = functools.partial(_masked_step, cfg=cfg)
+        self._queue: deque[Request] = deque()
+        self.admitted: list[int] = []  # rids in admission order
 
     # ------------------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int = 16) -> Request:
@@ -88,36 +209,74 @@ class ServeEngine:
         self._queue.append(req)
         return req
 
+    def _admission_order(self, cohort: list[Request]) -> list[Request]:
+        """Hilbert token batching (opt-in): order the admitted cohort by
+        the curve rank of each prompt's token signature, so requests with
+        similar prefixes land in adjacent slots — and, with the curve
+        page layout, in adjacent pages."""
+        from repro.data.pipeline import hilbert_token_order
+
+        width = max(len(r.prompt) for r in cohort)
+        toks = np.zeros((len(cohort), width), dtype=np.int32)
+        for i, r in enumerate(cohort):
+            toks[i, : len(r.prompt)] = r.prompt
+        perm = hilbert_token_order(toks)
+        return [cohort[i] for i in perm]
+
     def _attach(self) -> None:
-        for slot in range(self.num_slots):
-            if self.active[slot] or not self._queue:
-                continue
-            req = self._queue.pop(0)
+        free = [s for s in range(self.num_slots) if not self.active[s]]
+        if not free or not self._queue:
+            return
+        cohort: list[Request] = []
+        while len(cohort) < len(free) and self._queue:
+            cohort.append(self._queue.popleft())
+        if self.hilbert_admission and len(cohort) > 1:
+            cohort = self._admission_order(cohort)
+        new_slots: list[int] = []
+        for slot, req in zip(free, cohort):
             self.slot_req[slot] = req
             self.active[slot] = True
             self.pos[slot] = 0
-            self._reset_slot(slot)
-            # prefill token-by-token through the decode path (exact)
-            for t in req.prompt[:-1]:
-                self._single_token(slot, t)
-            self.next_token[slot] = req.prompt[-1]
+            self.admitted.append(req.rid)
+            if self.paged:
+                # stale page contents are unreachable (positional mask +
+                # write-before-attend), so admission allocates, never zeroes
+                self.kv_pages.ensure_pos(slot, max(len(req.prompt) - 1, 0))
+            else:
+                self.cache = _zero_slot(self.cache, np.int32(slot))
+            new_slots.append(slot)
+        self._prefill(new_slots)
 
-    def _reset_slot(self, slot: int) -> None:
-        """Zero a slot's cache rows (recurrent states carry history)."""
-        self.cache = jax.tree.map(
-            lambda x: x.at[:, slot].set(jnp.zeros_like(x[:, slot])), self.cache
-        )
-
-    def _single_token(self, slot: int, token: int) -> None:
-        toks = np.zeros((self.num_slots, 1), dtype=np.int32)
-        toks[slot, 0] = token
-        mask = np.zeros((self.num_slots,), dtype=bool)
-        mask[slot] = True
-        logits, self.cache = self._step(
-            self.params, jnp.asarray(toks), self.cache, jnp.asarray(self.pos),
-            jnp.asarray(mask),
-        )
-        self.pos[slot] += 1
+    def _prefill(self, slots: list[int]) -> None:
+        """Chunked prefill for freshly admitted slots: prefill_chunk
+        prompt tokens per dispatch, batched ACROSS the new slots (old
+        active slots ride along masked — their cache and pos are
+        untouched)."""
+        remaining = {s: list(self.slot_req[s].prompt[:-1]) for s in slots}
+        C = self.prefill_chunk
+        while any(remaining.values()):
+            toks = np.zeros((self.num_slots, C), dtype=np.int32)
+            mask = np.zeros((self.num_slots, C), dtype=bool)
+            for s in slots:
+                take = remaining[s][:C]
+                remaining[s] = remaining[s][C:]
+                toks[s, : len(take)] = take
+                mask[s, : len(take)] = True
+            if self.paged:
+                self.cache, pos = _masked_chunk_step_paged(
+                    self.params, jnp.asarray(toks), jnp.asarray(mask),
+                    self.cache, jnp.asarray(self.pos),
+                    self.kv_pages.device_table(),
+                    cfg=self.cfg, attn_impl=self.attn_impl,
+                )
+            else:
+                self.cache, pos = _masked_chunk_step(
+                    self.params, jnp.asarray(toks), jnp.asarray(mask),
+                    self.cache, jnp.asarray(self.pos), cfg=self.cfg,
+                )
+            self.pos = np.array(pos)  # copy: np.asarray of a jax array is read-only
+        for s in slots:
+            self.next_token[s] = self.slot_req[s].prompt[-1]
 
     # ------------------------------------------------------------------
     def step(self) -> None:
@@ -126,10 +285,21 @@ class ServeEngine:
         if not self.active.any():
             return
         toks = self.next_token[:, None].astype(np.int32)
-        logits, self.cache = self._step(
-            self.params, jnp.asarray(toks), self.cache, jnp.asarray(self.pos),
-            jnp.asarray(self.active),
-        )
+        if self.paged:
+            for slot in range(self.num_slots):
+                if self.active[slot]:
+                    self.kv_pages.ensure_pos(slot, int(self.pos[slot]))
+            logits, self.cache = _masked_step_paged(
+                self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(self.pos), jnp.asarray(self.active),
+                self.kv_pages.device_table(),
+                cfg=self.cfg, attn_impl=self.attn_impl,
+            )
+        else:
+            logits, self.cache = _masked_step(
+                self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(self.pos), jnp.asarray(self.active), cfg=self.cfg,
+            )
         logits = np.asarray(logits)
         if self.temperature > 0:
             self.key, sub = jax.random.split(self.key)
@@ -149,6 +319,8 @@ class ServeEngine:
                 req.done = True
                 self.active[slot] = False
                 self.slot_req[slot] = None
+                if self.paged:
+                    self.kv_pages.free_slot(slot)
 
     def run_until_done(self, max_iters: int = 10_000) -> None:
         it = 0

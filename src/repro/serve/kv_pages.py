@@ -1,0 +1,222 @@
+"""Paged KV cache with a space-filling-curve page layout.
+
+The serving decode path gathers K/V through a page table instead of a
+dense ``(B, S_max)`` cache.  This module owns the *allocation metadata*
+only — the physical pools (one ``(P, page_size, Hkv, D)`` array per
+layer) live in the model cache pytree so they can be donated through
+jit; one :class:`PagedKVCache` table is shared by every layer (the
+standard paged-attention design: the logical→physical map is identical
+across layers, the contents differ).
+
+Page 0 is reserved as a **trash page**: it is never allocated,
+unallocated page-table entries point at it, and the paged decode step
+diverts writes from masked (inactive) slots into it.  This keeps the
+device-side scatter free of branches — a masked slot writes its stale
+token somewhere harmless instead of needing a guard — and means a
+freshly-zeroed table is already valid to gather through (the kernel
+masks by position, never by table entry).
+
+The curve layout is the paper's locality story applied to serving:
+physical addresses are assigned so that the Hilbert rank of
+``(slot, logical_page)`` orders the pool.  Netay's clustering results
+(cyclic space-filling curves) say contiguous curve ranges decompose
+into few memory runs — so the per-step gather stream, which walks
+slots in schedule order and each slot's pages in logical order, touches
+fewer, longer contiguous strips than a first-fit allocator produces
+under allocation churn.  :meth:`PagedKVCache.gather_runs` measures
+exactly that (fewer runs = longer average strip = better locality) and
+is reported by ``benchmarks/bench_serving.py``.
+"""
+
+from __future__ import annotations
+
+import bisect
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_curve
+
+__all__ = ["PagedKVCache", "TRASH_PAGE"]
+
+# Physical page 0: reserved — gather target for unallocated table slots
+# and scatter target for masked-slot writes.  Never on the free list.
+TRASH_PAGE = 0
+
+LAYOUTS = ("hilbert", "naive")
+
+
+class PagedKVCache:
+    """Free-list page allocator + logical→physical table for serving.
+
+    Parameters
+    ----------
+    num_slots:
+        Number of decode slots ``B`` (the continuous-batching width).
+    max_pages:
+        Logical pages per slot ``MP``; a slot can hold up to
+        ``max_pages * page_size`` tokens.
+    page_size:
+        Tokens per page.  Decode position ``pos`` lives in logical page
+        ``pos // page_size``.
+    num_pages:
+        Physical pool size ``P`` *including* the trash page, so at most
+        ``num_pages - 1`` pages are allocatable.  Defaults to enough
+        for every slot to be full (``num_slots * max_pages + 1``) —
+        useful for tests; real deployments oversubscribe.
+    layout:
+        ``"hilbert"`` assigns each ``(slot, logical_page)`` a preferred
+        physical address from the registry's Hilbert map and allocates
+        the nearest free page to it; ``"naive"`` is a first-fit
+        (lowest-free-id) allocator, the churn-fragmentation baseline.
+    """
+
+    def __init__(
+        self,
+        num_slots: int,
+        max_pages: int,
+        page_size: int,
+        *,
+        num_pages: int | None = None,
+        layout: str = "hilbert",
+    ):
+        if layout not in LAYOUTS:
+            raise ValueError(f"layout {layout!r}; one of {LAYOUTS}")
+        if num_pages is None:
+            num_pages = num_slots * max_pages + 1
+        if num_pages < 2:
+            raise ValueError("num_pages must leave room beyond the trash page")
+        self.num_slots = num_slots
+        self.max_pages = max_pages
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.layout = layout
+        self.page_table = np.zeros((num_slots, max_pages), dtype=np.int32)
+        self.pages_used = np.zeros((num_slots,), dtype=np.int32)
+        # Sorted free list of physical ids; bisect gives nearest-free
+        # allocation for the curve layout and first-fit for naive.
+        self._free: list[int] = list(range(1, num_pages))
+        self._device_table = None
+        if layout == "hilbert":
+            self._preferred = self._hilbert_preferred()
+        else:
+            self._preferred = None
+
+    # -- layout -------------------------------------------------------
+
+    def _hilbert_preferred(self) -> np.ndarray:
+        """Preferred physical address for every (slot, logical_page).
+
+        The Hilbert rank of ``(slot, lp)`` on the smallest square grid
+        covering ``(num_slots, max_pages)`` is scaled into the usable
+        pool ``[1, num_pages)``.  Nearby (slot, page) pairs — the pairs
+        a decode step visits consecutively — get nearby preferred
+        addresses, so nearest-free allocation keeps the gather stream
+        in long runs even as slots grow and free at different rates.
+        """
+        side = max(self.num_slots, self.max_pages, 2)
+        nbits = max(1, int(np.ceil(np.log2(side))))
+        curve = get_curve("hilbert")
+        slots, lps = np.meshgrid(
+            np.arange(self.num_slots), np.arange(self.max_pages), indexing="ij"
+        )
+        coords = np.stack([slots.ravel(), lps.ravel()], axis=-1)
+        ranks = np.asarray(curve.encode(coords, nbits), dtype=np.int64)
+        span = 1 << (2 * nbits)
+        usable = self.num_pages - 1
+        pref = 1 + (ranks * usable) // span
+        return pref.reshape(self.num_slots, self.max_pages).astype(np.int64)
+
+    def _take_near(self, want: int) -> int:
+        """Pop the free physical id nearest to ``want`` (ties: lower)."""
+        free = self._free
+        i = bisect.bisect_left(free, want)
+        if i == 0:
+            return free.pop(0)
+        if i == len(free):
+            return free.pop()
+        lo, hi = free[i - 1], free[i]
+        return free.pop(i - 1) if want - lo <= hi - want else free.pop(i)
+
+    # -- allocation ---------------------------------------------------
+
+    def ensure(self, slot: int, logical_page: int) -> int:
+        """Return the physical id backing ``(slot, logical_page)``,
+        allocating it (and any earlier unallocated pages of the slot)
+        on first touch."""
+        if not 0 <= logical_page < self.max_pages:
+            raise ValueError(
+                f"logical page {logical_page} out of range "
+                f"[0, {self.max_pages}) for slot {slot}"
+            )
+        while self.pages_used[slot] <= logical_page:
+            lp = int(self.pages_used[slot])
+            if not self._free:
+                raise MemoryError(
+                    f"KV page pool exhausted ({self.num_pages - 1} pages)"
+                )
+            if self._preferred is not None:
+                phys = self._take_near(int(self._preferred[slot, lp]))
+            else:
+                phys = self._free.pop(0)
+            self.page_table[slot, lp] = phys
+            self.pages_used[slot] = lp + 1
+            self._device_table = None
+        return int(self.page_table[slot, logical_page])
+
+    def ensure_pos(self, slot: int, pos: int) -> int:
+        """Allocate every page needed so token position ``pos`` (and
+        all before it) is backed; returns the physical id of the page
+        holding ``pos``."""
+        return self.ensure(slot, pos // self.page_size)
+
+    def free_slot(self, slot: int) -> int:
+        """Return all of ``slot``'s pages to the free list (table rows
+        reset to the trash page).  Returns the number freed."""
+        n = int(self.pages_used[slot])
+        for lp in range(n):
+            bisect.insort(self._free, int(self.page_table[slot, lp]))
+        self.page_table[slot, :] = TRASH_PAGE
+        self.pages_used[slot] = 0
+        if n:
+            self._device_table = None
+        return n
+
+    # -- views --------------------------------------------------------
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def device_table(self) -> jnp.ndarray:
+        """The int32[num_slots, max_pages] table as a device array
+        (cached; invalidated on any allocation/free)."""
+        if self._device_table is None:
+            self._device_table = jnp.asarray(self.page_table)
+        return self._device_table
+
+    def gather_runs(self, slot_order=None) -> int:
+        """Number of contiguous memory runs in one decode step's gather
+        stream: walk slots in ``slot_order`` (default 0..B-1), each
+        slot's allocated pages in logical order, and count maximal runs
+        of consecutive physical ids.  Fewer runs = longer strips = the
+        clustering property the curve layout buys."""
+        if slot_order is None:
+            slot_order = range(self.num_slots)
+        runs = 0
+        prev = None
+        for slot in slot_order:
+            for lp in range(int(self.pages_used[slot])):
+                phys = int(self.page_table[slot, lp])
+                if prev is None or phys != prev + 1:
+                    runs += 1
+                prev = phys
+        return runs
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        used = self.num_pages - 1 - len(self._free)
+        return (
+            f"PagedKVCache(slots={self.num_slots}, max_pages={self.max_pages},"
+            f" page_size={self.page_size}, layout={self.layout!r},"
+            f" used={used}/{self.num_pages - 1})"
+        )

@@ -1,0 +1,359 @@
+"""Serving decode differentials: flash/paged decode vs the retained XLA
+path, the paged KV allocator, and the engine's continuous-batching modes.
+
+Every new decode path added by the Hilbert-paged serving work is pinned
+to the dense XLA `_sdpa` decode the same way the fused apps are pinned
+to their reference oracles:
+
+  * kernel level   — flash_attention_decode vs a numpy oracle over a
+    ragged page table (trash-page entries included);
+  * step level     — decode_step_paged (flash AND xla-gather) vs
+    decode_step, GQA and MLA, ragged per-slot positions;
+  * engine level   — ≥64-step greedy rollouts token-identical across
+    dense / paged-xla / flash-paged, plus slot eviction/re-admission.
+
+Engine rollouts compare engine modes run in the SAME process with
+module-level shared jit executables per (cfg, mode) — the cross-program
+ulp-drift lesson from the PR-5 serving flakes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.kernels import ops
+from repro.kernels.attention import decode_page_schedule, flash_attention_decode
+from repro.models import (
+    decode_step,
+    decode_step_paged,
+    init_cache,
+    init_paged_cache,
+    init_params,
+)
+from repro.serve import PagedKVCache, ServeEngine
+from repro.serve.kv_pages import TRASH_PAGE
+
+GQA = "tinyllama-1.1b"
+MLA = "deepseek-v2-236b"
+
+
+# ---------------------------------------------------------------------------
+# kernel level
+# ---------------------------------------------------------------------------
+
+class TestDecodeKernel:
+    def test_vs_numpy_oracle_ragged(self):
+        B, Hkv, g, Dk, ps, MP, P = 3, 2, 4, 32, 8, 4, 16
+        rng = np.random.default_rng(0)
+        pos = jnp.asarray([0, 11, 30], dtype=jnp.int32)
+        pt = np.zeros((B, MP), dtype=np.int32)
+        pt[0, 0] = 3
+        pt[1, :2] = [5, 1]
+        pt[2, :] = [7, 2, 9, 4]
+        q = jnp.asarray(rng.normal(size=(B, Hkv, g, Dk)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(P, ps, Hkv, Dk)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(P, ps, Hkv, Dk)), jnp.float32)
+        sched = jnp.asarray(decode_page_schedule(B, MP))
+        out = flash_attention_decode(
+            sched, jnp.asarray(pt), pos, q, kp, vp, interpret=True
+        )
+        for b in range(B):
+            n = int(pos[b]) + 1
+            ks = np.concatenate([np.asarray(kp)[pt[b, i]] for i in range(MP)])[:n]
+            vs = np.concatenate([np.asarray(vp)[pt[b, i]] for i in range(MP)])[:n]
+            for h in range(Hkv):
+                s = np.asarray(q)[b, h] @ ks[:, h].T / np.sqrt(Dk)
+                p = np.exp(s - s.max(-1, keepdims=True))
+                p /= p.sum(-1, keepdims=True)
+                ref = p @ vs[:, h]
+                np.testing.assert_allclose(
+                    np.asarray(out)[b, h], ref, atol=2e-6, rtol=1e-5
+                )
+
+    def test_trash_page_content_irrelevant(self):
+        """Unallocated table entries point at page 0; poisoning page 0
+        must not change the output (positional masking, not gather
+        branching)."""
+        B, Hkv, g, Dk, ps, MP, P = 2, 1, 2, 16, 4, 3, 8
+        rng = np.random.default_rng(1)
+        pos = jnp.asarray([2, 5], dtype=jnp.int32)
+        pt = np.zeros((B, MP), dtype=np.int32)
+        pt[0, 0] = 1
+        pt[1, :2] = [2, 3]
+        q = jnp.asarray(rng.normal(size=(B, Hkv, g, Dk)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(P, ps, Hkv, Dk)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(P, ps, Hkv, Dk)), jnp.float32)
+        sched = jnp.asarray(decode_page_schedule(B, MP))
+        out = flash_attention_decode(
+            sched, jnp.asarray(pt), pos, q, kp, vp, interpret=True
+        )
+        kp2 = kp.at[TRASH_PAGE].set(1e9)
+        vp2 = vp.at[TRASH_PAGE].set(-1e9)
+        out2 = flash_attention_decode(
+            sched, jnp.asarray(pt), pos, q, kp2, vp2, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
+# ops production surface
+# ---------------------------------------------------------------------------
+
+class TestOpsSurface:
+    def _ref(self, q, k, v, kv_len, causal):
+        B, H, S, D = q.shape
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(D)
+        m = (jnp.arange(S)[None, :] < kv_len[:, None])[:, None, None, :]
+        if causal:
+            m = m & (jnp.arange(S)[:, None] >= jnp.arange(S)[None, :])[None, None]
+        scores = jnp.where(m, scores, -jnp.inf)
+        return jnp.einsum(
+            "bhqk,bhkd->bhqd", jax.nn.softmax(scores, axis=-1), v
+        )
+
+    @pytest.mark.parametrize("mask_type", ["padding", "padding_causal"])
+    def test_mask_types_vs_reference(self, mask_type):
+        B, H, S, D = 2, 4, 48, 32
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q, k, v = (jax.random.normal(kk, (B, H, S, D)) for kk in ks)
+        kv_len = jnp.asarray([17, 48], dtype=jnp.int32)
+        out = ops.attention(q, k, v, mask_type=mask_type, kv_seqlen=kv_len)
+        ref = self._ref(q, k, v, kv_len, causal="causal" in mask_type)
+        valid_q = jnp.arange(S)[None, :] < kv_len[:, None]
+        err = jnp.where(valid_q[:, None, :, None], out - ref, 0)
+        np.testing.assert_allclose(np.asarray(err), 0, atol=2e-6)
+
+    def test_q_seqlen_zeroes_tail_rows(self):
+        B, H, S, D = 2, 2, 32, 16
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q, k, v = (jax.random.normal(kk, (B, H, S, D)) for kk in ks)
+        kv_len = jnp.asarray([9, 32], dtype=jnp.int32)
+        out = ops.attention(
+            q, k, v, mask_type="padding", kv_seqlen=kv_len, q_seqlen=kv_len
+        )
+        assert bool(jnp.all(out[0, :, 9:] == 0))
+        assert bool(jnp.any(out[0, :, :9] != 0))
+
+    def test_mask_type_validation(self):
+        q = jnp.zeros((1, 1, 16, 16))
+        with pytest.raises(ValueError, match="mask_type"):
+            ops.attention(q, q, q, mask_type="banded")
+        with pytest.raises(ValueError, match="kv_seqlen"):
+            ops.attention(q, q, q, mask_type="padding")
+
+
+# ---------------------------------------------------------------------------
+# paged KV allocator
+# ---------------------------------------------------------------------------
+
+class TestKVPages:
+    def test_alloc_free_trash(self):
+        c = PagedKVCache(4, 4, 8, layout="hilbert")
+        p0 = c.ensure_pos(0, 0)
+        assert p0 != TRASH_PAGE
+        assert c.ensure_pos(0, 7) == p0  # same page
+        p1 = c.ensure_pos(0, 8)
+        assert p1 != p0 and c.pages_used[0] == 2
+        t = c.device_table()
+        assert t.shape == (4, 4)
+        assert int(t[0, 0]) == p0 and int(t[0, 2]) == TRASH_PAGE
+        assert c.device_table() is t  # cached until mutation
+        assert c.free_slot(0) == 2
+        assert c.num_free == 16
+        assert int(c.device_table()[0, 0]) == TRASH_PAGE
+
+    def test_pages_distinct_across_slots(self):
+        c = PagedKVCache(4, 4, 8, layout="hilbert")
+        for s in range(4):
+            c.ensure_pos(s, 31)
+        phys = c.page_table[c.page_table != TRASH_PAGE]
+        assert len(set(phys.tolist())) == phys.size == 16
+
+    def test_exhaustion_raises(self):
+        c = PagedKVCache(2, 2, 4, num_pages=3, layout="naive")
+        c.ensure_pos(0, 7)
+        with pytest.raises(MemoryError):
+            c.ensure_pos(1, 0)
+
+    def test_hilbert_layout_fewer_runs_under_churn(self):
+        """The measurable locality claim: under interleaved slot growth
+        with eviction churn (the serving access pattern), the curve
+        layout's decode gather stream has fewer contiguous memory runs
+        than naive first-fit.  Deterministic given the seeds."""
+
+        def churn(layout, seed):
+            rng = np.random.default_rng(seed)
+            B, MP, ps = 8, 8, 16
+            c = PagedKVCache(B, MP, ps, layout=layout)
+            pos = np.zeros(B, dtype=int)
+            for s in range(B):
+                c.ensure_pos(s, 0)
+            for _ in range(400):
+                for s in range(B):
+                    pos[s] += 1
+                    if pos[s] >= MP * ps - 1:
+                        c.free_slot(s)
+                        pos[s] = int(rng.integers(0, ps))
+                    c.ensure_pos(s, int(pos[s]))
+                if rng.random() < 0.05:
+                    s = int(rng.integers(0, B))
+                    c.free_slot(s)
+                    pos[s] = 0
+                    c.ensure_pos(s, 0)
+            return c.gather_runs()
+
+        h = np.mean([churn("hilbert", s) for s in range(10)])
+        n = np.mean([churn("naive", s) for s in range(10)])
+        assert h < n, (h, n)
+
+
+# ---------------------------------------------------------------------------
+# step-level differentials
+# ---------------------------------------------------------------------------
+
+class TestPagedDecodeStep:
+    @pytest.mark.parametrize("arch", [GQA, MLA])
+    @pytest.mark.parametrize("attn_impl", ["flash", "xla"])
+    def test_paged_step_matches_dense(self, arch, attn_impl):
+        cfg = get_reduced(arch, dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        B, ps, MP = 4, 8, 4
+        pos = jnp.asarray([0, 5, 12, 22], dtype=jnp.int32)
+        dense = init_cache(cfg, B, ps * MP)
+        kvc = PagedKVCache(B, MP, ps, layout="hilbert")
+        for s in range(B):
+            kvc.ensure_pos(s, int(pos[s]))
+        pt = kvc.device_table()
+        pages = init_paged_cache(cfg, kvc.num_pages, ps)
+        # two history tokens per slot so the ragged depths hold real KV
+        for d in (2, 1):
+            hp = jnp.maximum(pos - d, 0)
+            htok = jax.random.randint(jax.random.PRNGKey(d), (B, 1), 0, cfg.vocab_size)
+            _, dense = decode_step(params, htok, dense, hp, cfg)
+            _, pages = decode_step_paged(
+                params, htok, pages, hp, pt, cfg, attn_impl=attn_impl
+            )
+        tok = jax.random.randint(jax.random.PRNGKey(9), (B, 1), 0, cfg.vocab_size)
+        lg_d, _ = decode_step(params, tok, dense, pos, cfg)
+        lg_p, _ = decode_step_paged(
+            params, tok, pages, pos, pt, cfg, attn_impl=attn_impl
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg_p), np.asarray(lg_d), atol=2e-5, rtol=1e-5
+        )
+        np.testing.assert_array_equal(
+            np.asarray(jnp.argmax(lg_p, -1)), np.asarray(jnp.argmax(lg_d, -1))
+        )
+
+
+# ---------------------------------------------------------------------------
+# engine-level differentials
+# ---------------------------------------------------------------------------
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", 96)
+    kw.setdefault("page_size", 16)
+    return ServeEngine(cfg, params, **kw)
+
+
+MODES = [
+    ("dense", dict(paged=False)),
+    ("paged-xla", dict(paged=True, attn_impl="xla")),
+    ("flash-paged", dict(paged=True, attn_impl="flash")),
+]
+
+
+class TestEngineModes:
+    @pytest.mark.parametrize("arch", [GQA, MLA])
+    def test_64_step_rollout_token_identical(self, arch):
+        """Acceptance: ≥64-step greedy rollouts token-identical across
+        dense / paged-xla / flash-paged, GQA and MLA."""
+        cfg = get_reduced(arch, dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        outs = {}
+        for name, kw in MODES:
+            eng = _engine(cfg, params, **kw)
+            r1 = eng.submit([3, 17, 42], max_new=64)
+            r2 = eng.submit([30, 2, 8, 11, 7], max_new=64)
+            eng.run_until_done()
+            assert len(r1.out) == 64 and len(r2.out) == 64
+            outs[name] = (r1.out, r2.out)
+        assert outs["paged-xla"] == outs["dense"]
+        assert outs["flash-paged"] == outs["dense"]
+
+    def test_eviction_readmission_token_identical(self):
+        """4 requests over 2 slots: every slot is evicted and re-admitted
+        with recycled physical pages; outputs must match dense exactly."""
+        cfg = get_reduced(GQA, dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        prompts = [[3, 17, 42], [30, 2, 8, 11, 7], [5, 9], [1, 2, 3, 4]]
+        outs = {}
+        for name, kw in MODES:
+            eng = _engine(cfg, params, **kw)
+            reqs = [eng.submit(p, max_new=8) for p in prompts]
+            eng.run_until_done()
+            outs[name] = [r.out for r in reqs]
+        assert outs["paged-xla"] == outs["dense"]
+        assert outs["flash-paged"] == outs["dense"]
+        # all pages returned after the last eviction
+        eng = _engine(cfg, params, paged=True)
+        for p in prompts:
+            eng.submit(p, max_new=4)
+        eng.run_until_done()
+        assert eng.kv_pages.num_free == eng.kv_pages.num_pages - 1
+
+    def test_admission_fifo_order(self):
+        """The deque-backed queue admits strictly in submission order."""
+        cfg = get_reduced(GQA, dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        eng = _engine(cfg, params, paged=True)
+        reqs = [eng.submit([5 + i], max_new=2) for i in range(5)]
+        eng.run_until_done()
+        assert eng.admitted == [r.rid for r in reqs]
+        assert all(r.done for r in reqs)
+
+    def test_chunked_prefill_matches_token_by_token(self):
+        """prefill_chunk=1 (the old token-by-token schedule) and
+        prefill_chunk=8 leave identical cache state and positions —
+        chunking is a dispatch-count optimisation, not a math change.
+        Compared on the CACHE, not rollout tokens: chunk sizes compile
+        different programs, and cross-program greedy chains can flip on
+        ulp ties (the PR-5 lesson)."""
+        cfg = get_reduced(GQA, dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        prompt = list(range(1, 12))
+        caches = []
+        for chunk in (1, 8):
+            eng = _engine(cfg, params, paged=True, prefill_chunk=chunk)
+            eng.submit(prompt, max_new=4)
+            eng._attach()
+            # drop the trash page: masked lanes of different chunkings
+            # divert different garbage into it (by design — it is never
+            # attended), so only real pages must agree
+            caches.append(jax.tree.map(lambda x: np.asarray(x)[:, 1:], eng.cache))
+            assert eng.pos[0] == len(prompt) - 1
+        for a, b in zip(jax.tree.leaves(caches[0]), jax.tree.leaves(caches[1])):
+            np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+    def test_hilbert_admission_preserves_outputs(self):
+        """Hilbert token batching reorders which slot a request lands in,
+        never what it generates."""
+        cfg = get_reduced(GQA, dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        prompts = [[40, 41, 42], [3, 1, 2], [40, 40, 40], [7, 8]]
+
+        def run(**kw):
+            eng = _engine(cfg, params, paged=True, num_slots=4, **kw)
+            reqs = [eng.submit(p, max_new=6) for p in prompts]
+            eng.run_until_done()
+            return [r.out for r in reqs]
+
+        assert run(hilbert_admission=True) == run(hilbert_admission=False)
+
+    def test_paged_rejects_recurrent_archs(self):
+        cfg = get_reduced("mamba2-2.7b", dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError, match="pure attention"):
+            ServeEngine(cfg, params, paged=True)
