@@ -7,6 +7,7 @@
   E5 bench_attention  — §6.2 jump-over on causal attention
   E5b bench_mesh      — beyond-paper Hilbert ICI layout
   E6 bench_serving    — dense vs Hilbert-paged vs flash-paged decode
+  E7 bench_apps_serving — streaming Lloyd / ε-join on the tick core
 
 Prints ``bench,name,value,derived`` CSV.  ``--json [PATH]`` additionally
 records the rows as JSON (default ``BENCH_curves.json``) so the perf
@@ -24,6 +25,7 @@ import time
 def main() -> None:
     from . import (
         bench_apps,
+        bench_apps_serving,
         bench_attention,
         bench_codec,
         bench_locality,
@@ -40,6 +42,7 @@ def main() -> None:
         ("attention", bench_attention),
         ("mesh", bench_mesh),
         ("serving", bench_serving),
+        ("apps_serving", bench_apps_serving),
     ]
     args = sys.argv[1:]
     json_path = None

@@ -92,6 +92,44 @@ class CurveProgram:
     def steps(self) -> int:
         return int(self.schedule.shape[0])
 
+    @property
+    def signature(self) -> tuple:
+        """Hashable tick-shape key: ``(name, steps, grid, columns)``.
+
+        Two launches with equal signatures trace identically — the
+        schedule is a *traced* operand, so only its SHAPE (plus the
+        grid and the kernel identity the name stands for) keys the jit
+        cache.  The streaming services (serve/apps.py) record the
+        signatures they dispatch to count expected retraces per tick
+        shape instead of guessing from wall time.
+        """
+        grid = self.grid if self.grid is not None else (self.steps,)
+        return (self.name, self.steps, tuple(int(g) for g in grid), self.columns)
+
+    def with_schedule(
+        self, schedule, *, out_specs=None, out_shape=None
+    ) -> "CurveProgram":
+        """Tick-relaunch constructor: the same declaration over a new
+        schedule table.  A streaming service re-issues one program per
+        tick with that tick's (usually differently-sized) table;
+        kernel, block specs, phases and the paired reference all carry
+        over.  ``out_specs`` / ``out_shape`` override the outputs when
+        they depend on the step count (e.g. per-step partial-sum rows).
+        The column arity is validated so a 4-column emission table can
+        never silently drive a 2-column program's index maps."""
+        if self.columns and int(schedule.shape[-1]) != len(self.columns):
+            raise ValueError(
+                f"{self.name}: schedule has {int(schedule.shape[-1])} "
+                f"columns, program declares {len(self.columns)} "
+                f"({self.columns})"
+            )
+        kw: dict[str, Any] = {"schedule": schedule}
+        if out_specs is not None:
+            kw["out_specs"] = out_specs
+        if out_shape is not None:
+            kw["out_shape"] = out_shape
+        return dataclasses.replace(self, **kw)
+
     def _out_items(self):
         outs = self.out_shape
         specs = self.out_specs

@@ -44,9 +44,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.program import CurveProgram
+from repro.core.program import CurveProgram, fits_vmem
 
 from .launch import launch
 
@@ -356,6 +357,63 @@ def simjoin_emit_program(
         out_shape=jax.ShapeDtypeStruct((p_pad, 2), jnp.int32),
         columns=("i", "j", "offset", "total"),
     )
+
+
+def simjoin_pairs_scheduled(
+    schedule,
+    xp: jax.Array,
+    *,
+    eps: float,
+    bp: int,
+    n_valid: int | None = None,
+    interpret: bool = False,
+) -> jax.Array | None:
+    """Two-pass pair emission over an ARBITRARY lower-triangle tile-pair
+    schedule: int32[P, 2] local-index pairs, i > j, in schedule-then-
+    row-major order — or ``None`` when the resident (p_pad, 2) emission
+    buffer would exceed the configured VMEM budget (callers choose their
+    own fallback oracle).
+
+    ``schedule`` is any int32[steps, 2] set of (i_tile >= j_tile) pairs
+    — the FGF-Hilbert triangle for the one-shot join (ops.py), or the
+    halo-pruned cohort×resident restriction the streaming service
+    builds each tick (serve/apps.py).  This driver owns the prefix-sum
+    / cap / padding arithmetic BETWEEN the two kernel dispatches
+    (pass-1 totals → host exclusive prefix sum → 4-column emission
+    table), so the batch and streaming joins cannot diverge on it.
+    ``xp``: (Np, D) with Np % bp == 0 (callers pad; ``n_valid`` is the
+    true row count when padding exists).
+    """
+    tri = np.asarray(schedule, dtype=np.int32)
+    if tri.shape[0] == 0:
+        return jnp.zeros((0, 2), dtype=jnp.int32)
+    D = xp.shape[1]
+    hits_i, _ = simjoin_tile_hits_swizzled(
+        jnp.asarray(tri), xp, eps=float(eps), bp=bp, n_valid=n_valid,
+        interpret=interpret,
+    )
+    tot = np.asarray(jnp.sum(hits_i, axis=1)).astype(np.int64)
+    P = int(tot.sum())
+    if P == 0:
+        return jnp.zeros((0, 2), dtype=jnp.int32)
+    check_pair_offsets(P, bp)
+    # static per-tile window: max per-tile total, rounded up but never
+    # past the bp*bp tile size (the argsort compaction's slice bound)
+    cap = min(max(8, -(-int(tot.max()) // 8) * 8), bp * bp)
+    offs = np.concatenate([[0], np.cumsum(tot)[:-1]])
+    p_pad = -(-(P + cap) // 8) * 8
+    table = np.column_stack([tri, offs, tot]).astype(np.int32)
+    emit_prog = simjoin_emit_program(
+        jnp.asarray(table), eps=float(eps), bp=bp, D=D, cap=cap,
+        p_pad=p_pad, n_valid=n_valid,
+    )
+    if not fits_vmem(emit_prog, xp, xp):
+        return None
+    out = simjoin_emit_swizzled(
+        jnp.asarray(table), xp, eps=float(eps), bp=bp, cap=cap,
+        p_pad=p_pad, n_valid=n_valid, interpret=interpret,
+    )
+    return out[:P]
 
 
 def simjoin_emit_halo_program(

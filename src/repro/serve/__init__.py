@@ -1,4 +1,15 @@
+from .apps import StreamKMeans, StreamSimJoin
 from .engine import ServeEngine
 from .kv_pages import PagedKVCache
+from .tick import StatsRing, Ticket, TickCore, TickStats
 
-__all__ = ["ServeEngine", "PagedKVCache"]
+__all__ = [
+    "PagedKVCache",
+    "ServeEngine",
+    "StatsRing",
+    "StreamKMeans",
+    "StreamSimJoin",
+    "Ticket",
+    "TickCore",
+    "TickStats",
+]

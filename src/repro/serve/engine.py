@@ -30,12 +30,19 @@ dispatch (a lax.scan of masked single-token decode steps — exact, and
 ``chunk``× fewer dispatches than the old token-by-token loop).  The
 compiled ``forward`` prefill + cache scatter remains the production
 path for very long prompts (the ``prefill_32k`` dry-run cell).
+
+Since PR 8 the request-side machinery — typed queue, capacity-limited
+admission, cohort ordering, the per-tick stats ring — is the generic
+tick core (:mod:`repro.serve.tick`), shared with the streaming
+data-mining services (:mod:`repro.serve.apps`).  The engine registers
+one command kind (``"generate"``, capacity = free slots, optional
+Hilbert admission ordering) and one step callback (the masked decode
+dispatch); ``step()`` is one tick.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from collections import deque
 from typing import Any
 
 import jax
@@ -50,6 +57,7 @@ from repro.models import (
     init_paged_cache,
 )
 from .kv_pages import PagedKVCache
+from .tick import TickCore
 
 # All step functions are module-level jits (cfg static/hashable) so every
 # engine over the same config shares ONE compiled executable.  Per-engine
@@ -164,6 +172,8 @@ class ServeEngine:
         page_layout: str = "hilbert",
         prefill_chunk: int = 8,
         hilbert_admission: bool = False,
+        admitted_log: int = 4096,
+        stats_capacity: int = 256,
     ):
         assert not cfg.encoder_only, "encoder-only archs have no decode path"
         if attn_impl not in ("flash", "xla"):
@@ -199,45 +209,82 @@ class ServeEngine:
         self.active = np.zeros((num_slots,), dtype=bool)
         self.key = jax.random.PRNGKey(seed)
         self._rid = 0
-        self._queue: deque[Request] = deque()
-        self.admitted: list[int] = []  # rids in admission order
+        if admitted_log < 1:
+            raise ValueError(f"admitted_log must be >= 1, got {admitted_log}")
+        self._admitted_log = admitted_log
+        self.admitted: list[int] = []  # rids in admission order (bounded)
+        # the request-side machinery is the shared tick core: one command
+        # kind admitted up to the free-slot count per tick, with the
+        # Hilbert cohort ordering as the kind's coalescer hook, and the
+        # decode dispatch as the per-tick step
+        self._core = TickCore(stats_capacity=stats_capacity)
+        self._core.register_kind(
+            "generate",
+            self._admit,
+            capacity=lambda: int(self.num_slots - np.count_nonzero(self.active)),
+            order=self._admission_order if hilbert_admission else None,
+        )
+        self._core.register_step(self._decode_tick)
+
+    @property
+    def _queue(self):
+        """The live generate queue (the tick core's deque) — kept under
+        the pre-tick-core name because the benchmarks and tests poll its
+        truthiness."""
+        return self._core.queue("generate")
+
+    @property
+    def stats(self):
+        """Per-tick stats ring (tick wall time drives the p99 rows)."""
+        return self._core.stats
 
     # ------------------------------------------------------------------
     def submit(self, prompt: list[int], max_new: int = 16) -> Request:
-        req = Request(rid=self._rid, prompt=list(prompt), max_new=max_new)
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt: a request needs >= 1 prompt token")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        req = Request(rid=self._rid, prompt=prompt, max_new=max_new)
         self._rid += 1
-        self._queue.append(req)
+        self._core.submit("generate", req)
         return req
 
-    def _admission_order(self, cohort: list[Request]) -> list[Request]:
+    def _admission_order(self, cohort: list) -> list:
         """Hilbert token batching (opt-in): order the admitted cohort by
         the curve rank of each prompt's token signature, so requests with
         similar prefixes land in adjacent slots — and, with the curve
         page layout, in adjacent pages."""
         from repro.data.pipeline import hilbert_token_order
 
-        width = max(len(r.prompt) for r in cohort)
-        toks = np.zeros((len(cohort), width), dtype=np.int32)
-        for i, r in enumerate(cohort):
+        reqs = [t.payload for t in cohort]
+        width = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((len(reqs), width), dtype=np.int32)
+        for i, r in enumerate(reqs):
             toks[i, : len(r.prompt)] = r.prompt
         perm = hilbert_token_order(toks)
         return [cohort[i] for i in perm]
 
     def _attach(self) -> None:
+        """Run one admission pass (queue → cohort → slots → prefill)
+        without a decode step — the tick core's admission phase only.
+        Tests and warm-up paths use this to separate admission from
+        decode."""
+        self._core.admit("generate")
+
+    def _admit(self, cohort: list) -> None:
+        """Admission handler: attach the tick's cohort to free slots and
+        chunk-prefill them (capacity() guarantees enough free slots)."""
         free = [s for s in range(self.num_slots) if not self.active[s]]
-        if not free or not self._queue:
-            return
-        cohort: list[Request] = []
-        while len(cohort) < len(free) and self._queue:
-            cohort.append(self._queue.popleft())
-        if self.hilbert_admission and len(cohort) > 1:
-            cohort = self._admission_order(cohort)
         new_slots: list[int] = []
-        for slot, req in zip(free, cohort):
+        for slot, ticket in zip(free, cohort):
+            req = ticket.payload
             self.slot_req[slot] = req
             self.active[slot] = True
             self.pos[slot] = 0
             self.admitted.append(req.rid)
+            ticket.done = True
+            ticket.result = slot
             if self.paged:
                 # stale page contents are unreachable (positional mask +
                 # write-before-attend), so admission allocates, never zeroes
@@ -245,6 +292,10 @@ class ServeEngine:
             else:
                 self.cache = _zero_slot(self.cache, np.int32(slot))
             new_slots.append(slot)
+        if len(self.admitted) > self._admitted_log:
+            # bounded admission log: keep only the most recent rids, so a
+            # long-running engine's memory stays O(admitted_log)
+            del self.admitted[: len(self.admitted) - self._admitted_log]
         self._prefill(new_slots)
 
     def _prefill(self, slots: list[int]) -> None:
@@ -280,8 +331,12 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One decode iteration across all active slots."""
-        self._attach()
+        """One engine tick: admission (via the tick core's generate
+        cohort) followed by one decode iteration across active slots."""
+        self._core.tick()
+
+    def _decode_tick(self) -> None:
+        """The tick core's step callback: one masked decode dispatch."""
         if not self.active.any():
             return
         toks = self.next_token[:, None].astype(np.int32)
@@ -323,7 +378,6 @@ class ServeEngine:
                     self.kv_pages.free_slot(slot)
 
     def run_until_done(self, max_iters: int = 10_000) -> None:
-        it = 0
-        while (self._queue or self.active.any()) and it < max_iters:
-            self.step()
-            it += 1
+        self._core.run_until_idle(
+            busy=lambda: bool(self.active.any()), max_ticks=max_iters
+        )

@@ -429,13 +429,17 @@ class TestHaloJoin:
 class TestPairOffsetOverflow:
     def test_single_core_raises(self, monkeypatch):
         from repro.kernels import ops as ops_mod
+        from repro.kernels import simjoin as simjoin_mod
 
         def fake_hits(sched, xp, **kw):
             steps = sched.shape[0]
             bp = kw["bp"]
             return jnp.full((steps, bp), 2**25, jnp.int32), None
 
-        monkeypatch.setattr(ops_mod, "simjoin_tile_hits_swizzled", fake_hits)
+        # ops.simjoin_pairs now delegates to the shared scheduled driver,
+        # so the count pass is intercepted at its home module
+        monkeypatch.setattr(simjoin_mod, "simjoin_tile_hits_swizzled",
+                            fake_hits)
         x = jnp.asarray(RNG.normal(size=(64, 3)), jnp.float32)
         with pytest.raises(ValueError, match="overflow"):
             ops_mod.simjoin_pairs(x, eps=0.5, bp=32, interpret=True)

@@ -1,0 +1,216 @@
+"""Tick core units + the engine's admission-side satellites.
+
+The generic service loop (serve/tick.py) is host-side and model-free, so
+most of this file runs without jax; the last class checks the behaviours
+``ServeEngine`` gained when it moved onto the core — submit validation
+and the bounded admission log — against a real reduced model.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.tick import StatsRing, TickCore, TickStats
+
+
+def _stats(i, dur):
+    return TickStats(index=i, duration_s=dur, admitted={}, counters={})
+
+
+class TestStatsRing:
+    def test_capacity_bound_and_total(self):
+        r = StatsRing(capacity=4)
+        for i in range(10):
+            r.push(_stats(i, float(i)))
+        assert len(r) == 4
+        assert r.total_ticks == 10  # lifetime count keeps going
+        assert [s.index for s in r] == [6, 7, 8, 9]
+
+    def test_percentiles_nearest_rank(self):
+        r = StatsRing(capacity=100)
+        for i in range(100):
+            r.push(_stats(i, (i + 1) / 100.0))
+        assert r.percentile(0) == 0.01
+        assert r.percentile(100) == 1.0
+        assert r.p99() == 0.99
+        assert abs(r.mean() - 0.505) < 1e-12
+
+    def test_empty_ring(self):
+        r = StatsRing()
+        assert r.p99() == 0.0 and r.mean() == 0.0 and r.last() is None
+
+    def test_capacity_validated(self):
+        with pytest.raises(ValueError):
+            StatsRing(capacity=0)
+
+
+class TestTickCore:
+    def test_cohort_single_handler_call(self):
+        calls = []
+        core = TickCore()
+        core.register_kind("work", lambda c: calls.append([t.payload for t in c]))
+        for i in range(5):
+            core.submit("work", i)
+        core.tick()
+        assert calls == [[0, 1, 2, 3, 4]]  # ONE call, whole cohort
+
+    def test_capacity_coalescer(self):
+        seen = []
+        core = TickCore()
+        core.register_kind(
+            "work", lambda c: seen.append(len(c)), capacity=lambda: 2
+        )
+        for i in range(5):
+            core.submit("work", i)
+        core.tick()
+        core.tick()
+        core.tick()
+        assert seen == [2, 2, 1]
+        assert core.pending("work") == 0
+
+    def test_order_hook_applied_and_fifo_default(self):
+        got = []
+        core = TickCore()
+        core.register_kind(
+            "srt",
+            lambda c: got.append([t.payload for t in c]),
+            order=lambda c: sorted(c, key=lambda t: t.payload),
+        )
+        core.register_kind("fifo", lambda c: got.append([t.payload for t in c]))
+        for v in (3, 1, 2):
+            core.submit("srt", v)
+            core.submit("fifo", v)
+        core.tick()
+        assert got == [[1, 2, 3], [3, 1, 2]]
+
+    def test_tickets_resolved_by_handler(self):
+        core = TickCore()
+
+        def handler(cohort):
+            for t in cohort:
+                t.result = t.payload * 10
+                t.done = True
+
+        core.register_kind("mul", handler)
+        t = core.submit("mul", 7)
+        assert not t.done
+        core.tick()
+        assert t.done and t.result == 70
+
+    def test_unknown_kind_and_duplicate_registration(self):
+        core = TickCore()
+        core.register_kind("a", lambda c: None)
+        with pytest.raises(ValueError, match="unknown command kind"):
+            core.submit("b", 1)
+        with pytest.raises(ValueError, match="already registered"):
+            core.register_kind("a", lambda c: None)
+
+    def test_step_runs_every_tick_even_idle(self):
+        steps = []
+        core = TickCore()
+        core.register_step(lambda: steps.append(core.tick_index))
+        core.tick()
+        core.tick()
+        assert steps == [0, 1]
+
+    def test_periodic_triggers_with_phase(self):
+        fired = []
+        core = TickCore()
+        core.every(3, lambda: fired.append(("a", core.tick_index)))
+        core.every(2, lambda: fired.append(("b", core.tick_index)), phase=1)
+        for _ in range(6):
+            core.tick()
+        assert [f for f in fired if f[0] == "a"] == [("a", 0), ("a", 3)]
+        assert [f for f in fired if f[0] == "b"] == [("b", 1), ("b", 3), ("b", 5)]
+        with pytest.raises(ValueError):
+            core.every(0, lambda: None)
+
+    def test_counters_land_in_tick_stats(self):
+        core = TickCore()
+        core.register_kind("k", lambda c: core.count("seen", len(c)))
+        core.register_step(lambda: core.count("steps"))
+        core.submit("k", 1)
+        core.submit("k", 2)
+        s0 = core.tick()
+        s1 = core.tick()
+        assert s0.counters == {"seen": 2.0, "steps": 1.0}
+        assert s0.admitted == {"k": 2}
+        assert s1.counters == {"steps": 1.0} and s1.admitted == {}
+        assert core.stats.total("seen") == 2.0
+        assert core.stats.total("steps") == 2.0
+        assert core.stats.total("absent") == 0.0
+
+    def test_admit_only_skips_step_and_stats(self):
+        handled, steps = [], []
+        core = TickCore()
+        core.register_kind("k", lambda c: handled.extend(c))
+        core.register_step(lambda: steps.append(1))
+        core.submit("k", 1)
+        out = core.admit()
+        assert out == {"k": 1} and len(handled) == 1
+        assert steps == [] and core.stats.total_ticks == 0
+
+    def test_run_until_idle_busy_predicate(self):
+        budget = {"left": 3}
+        core = TickCore()
+        core.register_step(lambda: budget.update(left=budget["left"] - 1))
+        ran = core.run_until_idle(busy=lambda: budget["left"] > 0)
+        assert ran == 3 and core.stats.total_ticks == 3
+
+    def test_run_until_idle_max_ticks(self):
+        core = TickCore()
+        assert core.run_until_idle(busy=lambda: True, max_ticks=7) == 7
+
+
+class TestEngineAdmissionSatellites:
+    @pytest.fixture(scope="class")
+    def engine_parts(self):
+        jax = pytest.importorskip("jax")
+        from repro.configs import get_reduced
+        from repro.models import init_params
+
+        cfg = get_reduced("tinyllama-1.1b", dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        return cfg, params
+
+    def test_submit_rejects_empty_prompt(self, engine_parts):
+        from repro.serve import ServeEngine
+
+        eng = ServeEngine(*engine_parts, num_slots=2, max_len=64)
+        with pytest.raises(ValueError, match="empty prompt"):
+            eng.submit([])
+        assert eng.pending == 0 if hasattr(eng, "pending") else True
+        assert len(eng._queue) == 0  # nothing admitted
+
+    def test_submit_rejects_nonpositive_max_new(self, engine_parts):
+        from repro.serve import ServeEngine
+
+        eng = ServeEngine(*engine_parts, num_slots=2, max_len=64)
+        with pytest.raises(ValueError, match="max_new"):
+            eng.submit([1, 2, 3], max_new=0)
+        with pytest.raises(ValueError, match="max_new"):
+            eng.submit([1, 2, 3], max_new=-1)
+
+    def test_admitted_log_bounded(self, engine_parts):
+        from repro.serve import ServeEngine
+
+        eng = ServeEngine(
+            *engine_parts, num_slots=2, max_len=64, admitted_log=5
+        )
+        rids = []
+        for _ in range(4):
+            reqs = [eng.submit([1, 2], max_new=1) for _ in range(2)]
+            rids += [r.rid for r in reqs]
+            eng.run_until_done(max_iters=50)
+        assert len(eng.admitted) <= 5
+        assert eng.admitted == rids[-len(eng.admitted):]  # most recent kept
+        with pytest.raises(ValueError, match="admitted_log"):
+            ServeEngine(*engine_parts, num_slots=2, max_len=64, admitted_log=0)
+
+    def test_engine_stats_ring_populates(self, engine_parts):
+        from repro.serve import ServeEngine
+
+        eng = ServeEngine(*engine_parts, num_slots=2, max_len=64)
+        eng.submit([1, 2, 3], max_new=2)
+        eng.run_until_done(max_iters=50)
+        assert eng.stats.total_ticks > 0
+        assert eng.stats.p99() > 0.0
+        assert eng.stats.last().admitted.get("generate") in (None, 1)
