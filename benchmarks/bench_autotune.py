@@ -1,0 +1,84 @@
+"""E8 — the measured schedule autotuner: chosen vs default traversal.
+
+Runs :func:`repro.kernels.autotune.autotune_app` over a small portfolio
+of curve candidates for two §7 apps and reports one warm-time row per
+measured candidate, flagged ``chosen`` / ``default``.  The winner is
+recorded in the tuning cache and read back through :func:`lookup` —
+the ``*_cache_consulted`` row asserts the same round trip
+``launch(choice="auto")`` takes at dispatch time.
+
+The headline gate (CI): for at least one app the chosen schedule's warm
+time is no worse than the default's.  The tuner always measures the
+default first and picks the argmin, so a regression here means the
+measurement or cache plumbing broke, not that the default was already
+optimal.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels import autotune
+
+N_FW, B_FW = 128, 32
+N_KM, K, BP, BC = 512, 16, 128, 16
+CURVES = ("hilbert", "fur", "harmonious", "hcyclic")
+
+
+def _fw_operand(n=N_FW, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0.1, 1.0, size=(n, n)).astype(np.float32)
+    np.fill_diagonal(x, 0.0)
+    return jnp.asarray(x)
+
+
+def _km_operand(n=N_KM, d=3, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, 1, size=(n, d)).astype(np.float32))
+
+
+def run() -> list[dict]:
+    rows: list[dict] = []
+    jobs = [
+        ("floyd_warshall", (_fw_operand(),), {"b": B_FW}),
+        ("kmeans_lloyd", (_km_operand(), K), {"iters": 2, "bp": BP, "bc": BC}),
+    ]
+    for app, args, kw in jobs:
+        out = autotune.autotune_app(
+            app, *args, curves=CURVES, repeats=2, max_measure=4, **kw
+        )
+        for r in out["rows"]:
+            rows.append({
+                "bench": "autotune",
+                "name": f"{app}_{r['choice'].split('|')[1]}_warm_ms",
+                "value": round(r["warm_ms"], 3),
+                "derived": (
+                    f"choice={r['choice']};chosen={r['chosen']};"
+                    f"default={r['default']}"
+                ),
+            })
+        best_ms = min(r["warm_ms"] for r in out["rows"])
+        rows.append({
+            "bench": "autotune",
+            "name": f"{app}_tuned_speedup",
+            "value": round(out["default_ms"] / max(best_ms, 1e-9), 3),
+            "derived": (
+                f"default_ms={round(out['default_ms'], 3)};"
+                f"winner={out['winner']};key={out['key']}"
+            ),
+        })
+        shapes = tuple(
+            tuple(a.shape) for a in args if hasattr(a, "shape")
+        )
+        consulted = autotune.lookup(app, shapes)
+        rows.append({
+            "bench": "autotune",
+            "name": f"{app}_cache_consulted",
+            "value": int(consulted is not None),
+            "derived": (
+                f"lookup={consulted.key() if consulted else None};"
+                f"matches_winner={consulted is not None and consulted.key() == out['winner']}"
+            ),
+        })
+    return rows

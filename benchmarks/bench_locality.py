@@ -20,7 +20,10 @@ from repro.core import (
     tile_schedule_nd,
 )
 
-CURVES = ("row", "zigzag", "zorder", "gray", "hilbert", "fur", "peano")
+CURVES = (
+    "row", "zigzag", "zorder", "gray", "hilbert", "fur", "peano",
+    "harmonious", "hcyclic",
+)
 
 
 def _tile_stream_3d(sched):

@@ -8,6 +8,7 @@
   E5b bench_mesh      — beyond-paper Hilbert ICI layout
   E6 bench_serving    — dense vs Hilbert-paged vs flash-paged decode
   E7 bench_apps_serving — streaming Lloyd / ε-join on the tick core
+  E8 bench_autotune   — measured schedule choices: chosen vs default
 
 Prints ``bench,name,value,derived`` CSV.  ``--json [PATH]`` additionally
 records the rows as JSON (default ``BENCH_curves.json``) so the perf
@@ -27,6 +28,7 @@ def main() -> None:
         bench_apps,
         bench_apps_serving,
         bench_attention,
+        bench_autotune,
         bench_codec,
         bench_locality,
         bench_matmul,
@@ -43,6 +45,7 @@ def main() -> None:
         ("mesh", bench_mesh),
         ("serving", bench_serving),
         ("apps_serving", bench_apps_serving),
+        ("autotune", bench_autotune),
     ]
     args = sys.argv[1:]
     json_path = None
@@ -96,7 +99,7 @@ def main() -> None:
         for row in collected:
             tag_counts[row["suite"]] = tag_counts.get(row["suite"], 0) + 1
         summary = {
-            "schema_version": 3,
+            "schema_version": 4,
             "suites": sorted(row_counts),
             "row_counts": {k: row_counts[k] for k in sorted(row_counts)},
             "total_rows": len(collected),

@@ -11,6 +11,8 @@ Modules:
   hilbert_nd    d-dimensional Hilbert/Z-order/Gray codecs   (beyond-paper)
   fgf_nd        d-dimensional jump-over walker              (beyond-paper)
   curve         SpaceFillingCurve abstraction + registry    (beyond-paper)
+  curves_nd     table-driven curve algebras (harmonious,
+                cyclic) + verification oracles              (beyond-paper)
   schedule      tile-schedule factory + traffic models      (TPU adaptation)
   program       CurveProgram declarations + VMEM budget +
                 curve-range partitioning                    (execution layer)
@@ -40,12 +42,23 @@ from .fgf import (
     rect_classifier,
     triangle_classifier,
 )
+from .curves_nd import (
+    CurveAlgebra,
+    TableCurveAlgebra,
+    algebra_names,
+    facet_consistency_score,
+    get_algebra,
+    register_algebra,
+    table_curve_oracle,
+    verify_table_curve,
+)
 from .fgf_nd import (
     BandRegion,
     BoxRegion,
     IntersectRegion,
     PredicateRegion,
     TriangleRegion,
+    curve_jump_path_nd,
     fgf_box_nd,
     fgf_path_nd,
     fgf_triangle_nd,
@@ -115,6 +128,10 @@ from .schedule import (
     CURVES,
     FW_PHASES,
     KMEANS_PHASES,
+    SCHEDULE_KINDS,
+    ScheduleChoice,
+    as_choice,
+    build_schedule,
     kmeans_schedule,
     kmeans_schedule_device,
     lru_misses,

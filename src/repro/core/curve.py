@@ -29,7 +29,7 @@ import math
 
 import numpy as np
 
-from . import fgf, hilbert_nd
+from . import curves_nd, fgf, hilbert_nd
 from .fur import fur_path
 from .hilbert import hilbert_decode, hilbert_encode
 from .lindenmayer import hilbert_path_vectorised
@@ -290,6 +290,69 @@ class HilbertCurve(SpaceFillingCurve):
         return hilbert_nd.hilbert_path_nd(shape)
 
 
+class AlgebraCurve(SpaceFillingCurve):
+    """A curve hosted on a :class:`repro.core.curves_nd.CurveAlgebra`:
+    codecs come from the algebra's vectorised Mealy machine, and paths
+    for non-power-of-two shapes run the same FGF jump-over walker as
+    Hilbert (output-linear generation), parameterised by the algebra."""
+
+    def __init__(self, algebra: curves_nd.CurveAlgebra):
+        self._alg = algebra
+        self.name = algebra.name
+        self.resolution_free = algebra.resolution_free
+
+    def supports(self, ndim: int) -> bool:
+        return self._alg.supports(ndim)
+
+    def encode(self, coords, nbits: int | None = None):
+        return self._alg.encode(coords, nbits)
+
+    def decode(self, h, ndim: int, nbits: int | None = None):
+        return self._alg.decode(h, ndim, nbits)
+
+    def path(self, shape: tuple[int, ...]) -> np.ndarray:
+        self._check(shape)
+        ndim = len(shape)
+        if any(s <= 0 for s in shape):
+            return np.zeros((0, ndim), dtype=np.int64)
+        nbits = hilbert_nd.cover_bits(shape)
+        if all(s == 1 << nbits for s in shape):
+            side = 1 << nbits
+            return self._alg.decode(
+                np.arange(side**ndim, dtype=np.int64), ndim, nbits=nbits
+            )
+        from . import fgf_nd  # local import: fgf_nd builds on curves_nd
+
+        return fgf_nd.curve_jump_path_nd(shape, curve=self.name)
+
+
+class HarmoniousCurve(AlgebraCurve):
+    """Harmonious Hilbert variant (Haverkort arXiv:1211.0175): the
+    facet-consistency argmin of the complete vertex-gated table family —
+    every facet's induced visit order is as close as the family allows
+    to a re-oriented lower-dimensional Hilbert curve (score 128 vs 608
+    for the Skilling table on depth-3 facets at d = 3).  At d = 2 the
+    family is a single curve — Hilbert itself — so this registers the
+    bit-identical table.  Resolution-free (canonical coding with the
+    period of its T_0 rotation)."""
+
+    def __init__(self):
+        super().__init__(curves_nd.HARMONIOUS)
+
+
+class HCyclicCurve(AlgebraCurve):
+    """Netay-style cyclic curve (arXiv:2006.10286): a closed loop at
+    every depth — Moore-style root table over 2^d re-oriented Skilling
+    bodies, wrap-around gluing certified at all depths.  The loop
+    property kills worst-case curve-distance between spatially adjacent
+    cells at the seam of the open curve.  Not resolution-free (the root
+    placement depends on the grid depth): codecs need explicit
+    ``nbits``."""
+
+    def __init__(self):
+        super().__init__(curves_nd.HCYCLIC)
+
+
 class FurCurve(SpaceFillingCurve):
     """Overlay-grid generalised Hilbert (paper §6.1): native n×m, 2-D."""
 
@@ -369,6 +432,8 @@ for _cls in (
     ZorderCurve,
     GrayCurve,
     HilbertCurve,
+    HarmoniousCurve,
+    HCyclicCurve,
     FurCurve,
     PeanoCurve,
 ):

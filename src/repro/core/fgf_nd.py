@@ -35,14 +35,9 @@ import functools
 
 import numpy as np
 
+from .curves_nd import get_algebra
 from .fgf import EMPTY, FULL, PARTIAL
-from .hilbert_nd import (
-    canonical_start_state_nd,
-    child_corner_nd,
-    child_state_nd,
-    cover_bits,
-    decode_from_state_nd,
-)
+from .hilbert_nd import cover_bits
 
 __all__ = [
     "BandRegion",
@@ -50,6 +45,7 @@ __all__ = [
     "IntersectRegion",
     "PredicateRegion",
     "TriangleRegion",
+    "curve_jump_path_nd",
     "fgf_box_nd",
     "fgf_path_nd",
     "fgf_triangle_nd",
@@ -186,15 +182,17 @@ class PredicateRegion(Region):
 # ---------------------------------------------------------------------------
 
 class _StateTables:
-    """Child-state/corner tables keyed by dense state ids for one ndim.
+    """Child-state/corner tables keyed by dense state ids for one
+    (curve algebra, ndim).
 
     The signed permutations reachable from the canonical roots form a
-    small subgroup (4 states at d = 2 — the Mealy machine), so the
-    tables converge after a few nodes and every later frontier expansion
-    is two fancy-indexes.
+    small subgroup (4 states at d = 2 — the Mealy machine; cyclic curves
+    add their one-shot ROOT node), so the tables converge after a few
+    nodes and every later frontier expansion is two fancy-indexes.
     """
 
-    def __init__(self, ndim: int):
+    def __init__(self, algebra, ndim: int):
+        self.algebra = algebra
         self.ndim = ndim
         self.ids: dict[tuple, int] = {}
         self.states: list[tuple] = []
@@ -227,14 +225,11 @@ class _StateTables:
         i = 0
         while i < len(self.states):  # self.states grows during closure
             if self._rows_ids[i] is None:
-                state = self.states[i]
-                digits = range(1 << self.ndim)
+                kids = self.algebra.node_children(self.states[i], self.ndim)
                 self._rows_ids[i] = np.asarray(
-                    [self.sid(child_state_nd(state, w, self.ndim))
-                     for w in digits], dtype=np.int64)
+                    [self.sid(child) for _, child in kids], dtype=np.int64)
                 self._rows_bits[i] = np.asarray(
-                    [child_corner_nd(state, w, self.ndim) for w in digits],
-                    dtype=np.int64)
+                    [corner for corner, _ in kids], dtype=np.int64)
             i += 1
         self._child_ids = np.stack(self._rows_ids)
         self._child_bits = np.stack(self._rows_bits)
@@ -242,45 +237,47 @@ class _StateTables:
         return self._child_ids, self._child_bits
 
 
-_TABLES: dict[int, _StateTables] = {}
+_TABLES: dict[tuple[str, int], _StateTables] = {}
 
 
-def _tables_for(ndim: int) -> _StateTables:
-    t = _TABLES.get(ndim)
+def _tables_for(algebra, ndim: int) -> _StateTables:
+    key = (algebra.name, ndim)
+    t = _TABLES.get(key)
     if t is None:
-        t = _TABLES[ndim] = _StateTables(ndim)
+        t = _TABLES[key] = _StateTables(algebra, ndim)
     return t
 
 
 @functools.lru_cache(maxsize=256)
-def _state_path_cached(ndim: int, level: int, perm: tuple, flip: int):
-    out = decode_from_state_nd(
-        np.arange(1 << (ndim * level), dtype=np.int64), level, (perm, flip), ndim
+def _state_path_cached(curve: str, ndim: int, level: int, node):
+    out = get_algebra(curve).decode_from_node(
+        np.arange(1 << (ndim * level), dtype=np.int64), level, node, ndim
     )
     out.setflags(write=False)
     return out
 
 
-def _state_path(ndim: int, level: int, state) -> np.ndarray:
-    """Transformed reference path of a (level, state) subcube; small blocks
+def _state_path(algebra, ndim: int, level: int, node) -> np.ndarray:
+    """Transformed reference path of a (level, node) subcube; small blocks
     are cached across calls (schedule generation hits few states)."""
     if ndim * level <= 12:  # <= 4096 cells: cache; larger blocks amortise
-        return _state_path_cached(ndim, level, *state)
-    return decode_from_state_nd(
-        np.arange(1 << (ndim * level), dtype=np.int64), level, state, ndim
+        return _state_path_cached(algebra.name, ndim, level, node)
+    return algebra.decode_from_node(
+        np.arange(1 << (ndim * level), dtype=np.int64), level, node, ndim
     )
 
 
 @functools.lru_cache(maxsize=64)
-def _all_state_paths(ndim: int, level: int) -> np.ndarray | None:
+def _all_state_paths(curve: str, ndim: int, level: int) -> np.ndarray | None:
     """Stacked [state_id, cell, axis] paths over the closed state group, so
     a bulk emission is a single fancy-index; None when too large to cache."""
-    tab = _tables_for(ndim)
+    algebra = get_algebra(curve)
+    tab = _tables_for(algebra, ndim)
     tab.tables()  # ensure the group is closed (ids are stable after this)
     cells = 1 << (ndim * level)
     if len(tab.states) * cells * ndim > (1 << 19):  # cap ~4 MB per entry
         return None
-    out = np.stack([_state_path(ndim, level, s) for s in tab.states])
+    out = np.stack([_state_path(algebra, ndim, level, s) for s in tab.states])
     out.setflags(write=False)
     return out
 
@@ -296,12 +293,16 @@ def fgf_path_nd(
     *,
     leaf_cells: int = 64,
     stats: dict | None = None,
+    curve: str = "hilbert",
 ) -> np.ndarray:
-    """Enumerate region cells of the (2^levels)^ndim grid in Hilbert order.
+    """Enumerate region cells of the (2^levels)^ndim grid in curve order.
 
     Returns int64[(k, 1 + ndim)] rows ``(h, x_0, ..., x_{d-1})`` with
-    *canonical* d-dim Hilbert values h (identical to
-    :func:`repro.core.hilbert_nd.hilbert_encode_nd` at the cover depth).
+    order values of the chosen ``curve`` algebra at the cover depth —
+    for the default ``"hilbert"`` the *canonical* d-dim values
+    (identical to :func:`repro.core.hilbert_nd.hilbert_encode_nd`); any
+    registered :class:`repro.core.curves_nd.CurveAlgebra` name swaps the
+    traversal with no walker changes.
 
     ``leaf_cells`` bounds the subcube size at which PARTIAL boxes stop
     descending and are mask-filtered instead — decode work near the
@@ -318,10 +319,11 @@ def fgf_path_nd(
     while (1 << (ndim * (leaf_level + 1))) <= max(leaf_cells, 1 << ndim):
         leaf_level += 1
     leaf_level = min(leaf_level, levels)
-    tab = _tables_for(ndim)
+    algebra = get_algebra(curve)
+    tab = _tables_for(algebra, ndim)
     corners = np.zeros((1, ndim), dtype=np.int64)
     h0s = np.zeros(1, dtype=np.int64)
-    sids = np.array([tab.sid(canonical_start_state_nd(levels, ndim))],
+    sids = np.array([tab.sid(algebra.start_node(levels, ndim))],
                     dtype=np.int64)
     digits = np.arange(1 << ndim, dtype=np.int64)
     emits: list[tuple] = []  # (level, corners, h0s, sids, masked)
@@ -379,17 +381,19 @@ def fgf_path_nd(
     for elevel, ecorners, eh0s, esids, masked in emits:
         cells = 1 << (ndim * elevel)
         decoded += cells * len(ecorners)
-        allpaths = _all_state_paths(ndim, elevel)
+        allpaths = _all_state_paths(curve, ndim, elevel)
         if allpaths is not None:
             stacked = allpaths[esids]
         elif len(ecorners) == 1:  # big blocks: decode once, no stacking
-            stacked = _state_path(ndim, elevel, tab.states[int(esids[0])])[None]
+            stacked = _state_path(
+                algebra, ndim, elevel, tab.states[int(esids[0])])[None]
         else:
             uniq = np.unique(esids)
             remap = np.zeros(int(uniq.max()) + 1, dtype=np.int64)
             remap[uniq] = np.arange(len(uniq))
             stacked = np.stack(
-                [_state_path(ndim, elevel, tab.states[int(u)]) for u in uniq]
+                [_state_path(algebra, ndim, elevel, tab.states[int(u)])
+                 for u in uniq]
             )[remap[esids]]
         coords = (stacked + ecorners[:, None, :]).reshape(-1, ndim)
         h = (eh0s[:, None]
@@ -418,13 +422,20 @@ def fgf_path_nd(
 # Convenience paths
 # ---------------------------------------------------------------------------
 
-def fgf_box_nd(shape: tuple[int, ...], *, stats: dict | None = None) -> np.ndarray:
+def fgf_box_nd(
+    shape: tuple[int, ...],
+    *,
+    stats: dict | None = None,
+    curve: str = "hilbert",
+) -> np.ndarray:
     """Grid ``shape`` clipped out of its power-of-two cover, with h column
     (the d-dim ``fgf.fgf_rect``)."""
     ndim = len(shape)
     if ndim == 0 or any(s <= 0 for s in shape):
         return np.zeros((0, 1 + ndim), dtype=np.int64)
-    return fgf_path_nd(cover_bits(shape), ndim, BoxRegion(shape), stats=stats)
+    return fgf_path_nd(
+        cover_bits(shape), ndim, BoxRegion(shape), stats=stats, curve=curve
+    )
 
 
 def fgf_triangle_nd(
@@ -434,6 +445,7 @@ def fgf_triangle_nd(
     lower: bool = True,
     strict: bool = True,
     stats: dict | None = None,
+    curve: str = "hilbert",
 ) -> np.ndarray:
     """Triangle x_a > x_b (or >=/</<=) of grid ``shape``, any dimension,
     with h column (the d-dim ``fgf.fgf_triangle``)."""
@@ -443,10 +455,21 @@ def fgf_triangle_nd(
     region = IntersectRegion(
         TriangleRegion(axes, lower=lower, strict=strict), BoxRegion(shape)
     )
-    return fgf_path_nd(cover_bits(shape), ndim, region, stats=stats)
+    return fgf_path_nd(
+        cover_bits(shape), ndim, region, stats=stats, curve=curve
+    )
+
+
+def curve_jump_path_nd(
+    shape: tuple[int, ...], *, curve: str = "hilbert"
+) -> np.ndarray:
+    """Coordinates of grid ``shape`` in ``curve`` order via jump-over
+    (no h column) — output-linear generation for every registered curve
+    algebra, not just Hilbert."""
+    return fgf_box_nd(shape, curve=curve)[:, 1:]
 
 
 def hilbert_jump_path_nd(shape: tuple[int, ...]) -> np.ndarray:
     """Coordinates of grid ``shape`` in canonical d-dim Hilbert order via
     jump-over (no h column) — the engine behind ``hilbert_path_nd``."""
-    return fgf_box_nd(shape)[:, 1:]
+    return curve_jump_path_nd(shape)

@@ -28,18 +28,18 @@ Everything runs in the *canonical* value space ``[0, 2^(d·nb))`` with
 :func:`repro.core.hilbert_encode_nd` and the device-side
 :func:`repro.core.hilbert_sort_key` assign, so the returned intervals
 compare directly against point sort keys.
+
+The walk is parameterised by the curve algebra (``curve=``, default
+``"hilbert"`` — bit-identical to the historical behaviour): any
+registered :class:`repro.core.curves_nd.CurveAlgebra` name runs the
+identical calculus in that curve's value space, with the algebra's own
+depth-padding rule in place of ``canonical_nbits``.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .hilbert_nd import (
-    canonical_nbits,
-    canonical_start_state_nd,
-    child_corner_nd,
-    child_state_nd,
-    hilbert_decode_nd,
-)
+from .curves_nd import get_algebra
 
 __all__ = [
     "curve_range_boxes",
@@ -59,22 +59,21 @@ def _check_range(lo: int, hi: int, ndim: int, nb: int) -> int:
     return total
 
 
-def _children(h0: int, level: int, corner: np.ndarray, state, ndim: int):
+def _children(h0: int, level: int, corner: np.ndarray, node, algebra, ndim: int):
     """The 2^d children of a tree node, in increasing-value order."""
     half = 1 << (level - 1)
     sub = 1 << (ndim * (level - 1))
-    for digit in range(1 << ndim):
-        cbits = np.asarray(child_corner_nd(state, digit, ndim), dtype=np.int64)
+    for digit, (cbits, child) in enumerate(algebra.node_children(node, ndim)):
         yield (
             h0 + digit * sub,
             level - 1,
-            corner + cbits * half,
-            child_state_nd(state, digit, ndim),
+            corner + np.asarray(cbits, dtype=np.int64) * half,
+            child,
         )
 
 
 def curve_range_boxes(
-    lo: int, hi: int, *, ndim: int, nbits: int
+    lo: int, hi: int, *, ndim: int, nbits: int, curve: str = "hilbert"
 ) -> list[tuple[np.ndarray, np.ndarray]]:
     """Maximal aligned subcubes whose cells are exactly the canonical
     value range ``[lo, hi)``.
@@ -89,12 +88,13 @@ def curve_range_boxes(
     """
     if ndim < 2:
         raise ValueError(f"curve calculus needs ndim >= 2, got {ndim}")
-    nb = canonical_nbits(nbits, ndim)
+    alg = get_algebra(curve)
+    nb = alg.canonical_levels(nbits, ndim)
     _check_range(lo, hi, ndim, nb)
     out: list[tuple[np.ndarray, np.ndarray]] = []
-    stack = [(0, nb, np.zeros(ndim, np.int64), canonical_start_state_nd(nb, ndim))]
+    stack = [(0, nb, np.zeros(ndim, np.int64), alg.start_node(nb, ndim))]
     while stack:
-        h0, level, corner, state = stack.pop()
+        h0, level, corner, node = stack.pop()
         size = 1 << (ndim * level)
         if h0 >= hi or h0 + size <= lo:
             continue
@@ -102,7 +102,9 @@ def curve_range_boxes(
             out.append((corner, corner + ((1 << level) - 1)))
             continue
         # straddles: a leaf (size 1) is always disjoint or inside
-        stack.extend(reversed(list(_children(h0, level, corner, state, ndim))))
+        stack.extend(
+            reversed(list(_children(h0, level, corner, node, alg, ndim)))
+        )
     return out
 
 
@@ -133,7 +135,8 @@ def _merge_intervals(ivs: list[tuple[int, int]]) -> np.ndarray:
 
 
 def halo_ranges(
-    lo: int, hi: int, *, ndim: int, nbits: int, radius: float
+    lo: int, hi: int, *, ndim: int, nbits: int, radius: float,
+    curve: str = "hilbert",
 ) -> np.ndarray:
     """Minimal foreign curve ranges within ``radius`` of range ``[lo, hi)``.
 
@@ -148,16 +151,17 @@ def halo_ranges(
     """
     if ndim < 2:
         raise ValueError(f"curve calculus needs ndim >= 2, got {ndim}")
-    nb = canonical_nbits(nbits, ndim)
+    alg = get_algebra(curve)
+    nb = alg.canonical_levels(nbits, ndim)
     _check_range(lo, hi, ndim, nb)
     if lo >= hi:
         return np.zeros((0, 2), dtype=np.int64)
-    query = curve_range_boxes(lo, hi, ndim=ndim, nbits=nb)
+    query = curve_range_boxes(lo, hi, ndim=ndim, nbits=nb, curve=curve)
     r2 = float(max(radius, 0.0)) ** 2
     found: list[tuple[int, int]] = []
-    stack = [(0, nb, np.zeros(ndim, np.int64), canonical_start_state_nd(nb, ndim))]
+    stack = [(0, nb, np.zeros(ndim, np.int64), alg.start_node(nb, ndim))]
     while stack:
-        h0, level, corner, state = stack.pop()
+        h0, level, corner, node = stack.pop()
         size = 1 << (ndim * level)
         if lo <= h0 and h0 + size <= hi:
             continue  # owned by the query range
@@ -172,22 +176,26 @@ def halo_ranges(
             # FULL (every cell reaches) or a reaching leaf: bulk-emit
             found.append((h0, h0 + size))
             continue
-        stack.extend(reversed(list(_children(h0, level, corner, state, ndim))))
+        stack.extend(
+            reversed(list(_children(h0, level, corner, node, alg, ndim)))
+        )
     found.sort()
     return _merge_intervals(found)
 
 
 def halo_ranges_oracle(
-    lo: int, hi: int, *, ndim: int, nbits: int, radius: float
+    lo: int, hi: int, *, ndim: int, nbits: int, radius: float,
+    curve: str = "hilbert",
 ) -> np.ndarray:
     """Brute-force reference for :func:`halo_ranges` — decodes every cell
     of the grid and tests all foreign × owned cell pairs.  O(4^(d·nb));
     property tests only."""
-    nb = canonical_nbits(nbits, ndim)
+    alg = get_algebra(curve)
+    nb = alg.canonical_levels(nbits, ndim)
     total = _check_range(lo, hi, ndim, nb)
     if lo >= hi:
         return np.zeros((0, 2), dtype=np.int64)
-    cells = hilbert_decode_nd(np.arange(total), ndim, nbits=nb)
+    cells = alg.decode(np.arange(total), ndim, nbits=nb)
     owned = cells[lo:hi]
     r2 = float(max(radius, 0.0)) ** 2
     vals = []
@@ -202,7 +210,8 @@ def halo_ranges_oracle(
 
 
 def neighbor_tile_mask(
-    key_ranges: np.ndarray, *, ndim: int, nbits: int, radius: float
+    key_ranges: np.ndarray, *, ndim: int, nbits: int, radius: float,
+    curve: str = "hilbert",
 ) -> np.ndarray:
     """Symmetric bool[T, T] reach mask over tiles of a key-sorted point set.
 
@@ -223,7 +232,7 @@ def neighbor_tile_mask(
             continue
         ivs = halo_ranges(
             int(kr[t, 0]), int(kr[t, 1]) + 1, ndim=ndim, nbits=nbits,
-            radius=radius,
+            radius=radius, curve=curve,
         )
         for u in range(T):
             if u == t or not live[u] or reach[t, u]:

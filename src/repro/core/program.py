@@ -87,6 +87,8 @@ class CurveProgram:
     phases: tuple[str, ...] = ()
     columns: tuple[str, ...] = ()
     reference: Callable | None = None
+    choice: Any = None
+    schedule_args: tuple = ()
 
     @property
     def steps(self) -> int:
@@ -94,29 +96,42 @@ class CurveProgram:
 
     @property
     def signature(self) -> tuple:
-        """Hashable tick-shape key: ``(name, steps, grid, columns)``.
+        """Hashable tick-shape key: ``(name, steps, grid, columns,
+        choice_key)``.
 
         Two launches with equal signatures trace identically — the
         schedule is a *traced* operand, so only its SHAPE (plus the
         grid and the kernel identity the name stands for) keys the jit
         cache.  The streaming services (serve/apps.py) record the
         signatures they dispatch to count expected retraces per tick
-        shape instead of guessing from wall time.
+        shape instead of guessing from wall time.  ``choice_key`` (the
+        :meth:`repro.core.ScheduleChoice.key` string, ``None`` when no
+        choice was recorded) is a conservative refinement: it splits
+        same-shape launches that run different traversal orders, so the
+        autotuner's per-choice accounting can key on the signature too.
         """
         grid = self.grid if self.grid is not None else (self.steps,)
-        return (self.name, self.steps, tuple(int(g) for g in grid), self.columns)
+        ck = self.choice.key() if self.choice is not None else None
+        return (
+            self.name, self.steps, tuple(int(g) for g in grid),
+            self.columns, ck,
+        )
 
     def with_schedule(
-        self, schedule, *, out_specs=None, out_shape=None
+        self, schedule, *, out_specs=None, out_shape=None, choice=None
     ) -> "CurveProgram":
-        """Tick-relaunch constructor: the same declaration over a new
-        schedule table.  A streaming service re-issues one program per
-        tick with that tick's (usually differently-sized) table;
-        kernel, block specs, phases and the paired reference all carry
-        over.  ``out_specs`` / ``out_shape`` override the outputs when
-        they depend on the step count (e.g. per-step partial-sum rows).
-        The column arity is validated so a 4-column emission table can
-        never silently drive a 2-column program's index maps."""
+        """Tick-relaunch constructor AND the schedule swap point: the
+        same declaration over a new schedule table.  A streaming service
+        re-issues one program per tick with that tick's (usually
+        differently-sized) table; the autotuner swaps in another curve's
+        table for the same grid (passing ``choice=`` so the program's
+        recorded :class:`repro.core.ScheduleChoice` — and therefore its
+        ``signature`` — follows the table).  Kernel, block specs, phases
+        and the paired reference all carry over.  ``out_specs`` /
+        ``out_shape`` override the outputs when they depend on the step
+        count (e.g. per-step partial-sum rows).  The column arity is
+        validated so a 4-column emission table can never silently drive
+        a 2-column program's index maps."""
         if self.columns and int(schedule.shape[-1]) != len(self.columns):
             raise ValueError(
                 f"{self.name}: schedule has {int(schedule.shape[-1])} "
@@ -128,6 +143,8 @@ class CurveProgram:
             kw["out_specs"] = out_specs
         if out_shape is not None:
             kw["out_shape"] = out_shape
+        if choice is not None:
+            kw["choice"] = choice
         return dataclasses.replace(self, **kw)
 
     def _out_items(self):

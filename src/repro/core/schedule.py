@@ -23,6 +23,7 @@ paper's Fig. 1(e) (cache misses vs. cache size) for tile streams.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from collections import OrderedDict
 from typing import Iterable
@@ -31,7 +32,124 @@ import numpy as np
 
 from .curve import get_curve
 
-CURVES = ("row", "col", "zigzag", "zorder", "gray", "hilbert", "fur", "peano")
+CURVES = ("row", "col", "zigzag", "zorder", "gray", "hilbert", "harmonious",
+          "hcyclic", "fur", "peano")
+
+# The schedule kinds a ScheduleChoice can name — one per builder family in
+# this module.  ``phased:*`` kinds pin the phase structure (FW vs Cholesky)
+# because their tables are not interchangeable.
+SCHEDULE_KINDS = ("tile", "triangle", "phased:fw", "phased:cholesky", "kmeans")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleChoice:
+    """One point in the tunable schedule space: curve × block × kind.
+
+    This is the value the PR-9 refactor threads from the registry to
+    ``launch()``: every schedule builder accepts one (or a bare curve
+    name), every fused-app builder stores the choice it was built with on
+    its :class:`repro.core.CurveProgram` (extending the program
+    ``signature``), and the autotuner's tuning cache persists winners as
+    :meth:`key` strings.
+
+    * ``curve`` — a registered curve name (:mod:`repro.core.curve`).
+    * ``block`` — app-interpreted block/tile sizes (e.g. ``(b,)`` for
+      FW/Cholesky, ``(bp, bc)`` for Lloyd, ``(bm, bn, bk)`` for matmul);
+      ``None`` means "the app's defaults".  Block sizes are resolved by
+      the ops wrappers *before* padding; ``launch()`` can only swap the
+      curve axis (block changes alter specs and padding).
+    * ``kind`` — which builder family generates the table (one of
+      :data:`SCHEDULE_KINDS`); documents what the choice parameterises
+      and guards against e.g. a Cholesky-phased table driving FW.
+    """
+
+    curve: str = "hilbert"
+    block: tuple[int, ...] | None = None
+    kind: str = "tile"
+
+    def __post_init__(self):
+        if self.kind not in SCHEDULE_KINDS:
+            raise ValueError(
+                f"unknown schedule kind {self.kind!r}; one of {SCHEDULE_KINDS}"
+            )
+        if self.block is not None:
+            object.__setattr__(
+                self, "block", tuple(int(b) for b in self.block)
+            )
+
+    def key(self) -> str:
+        """Stable string form, the tuning-cache value format:
+        ``kind|curve|b0xb1x...`` (``-`` for default blocks)."""
+        blk = "x".join(str(b) for b in self.block) if self.block else "-"
+        return f"{self.kind}|{self.curve}|{blk}"
+
+    @classmethod
+    def from_key(cls, key: str) -> "ScheduleChoice":
+        """Inverse of :meth:`key` (round-trips exactly)."""
+        kind, curve, blk = key.split("|")
+        block = (
+            None if blk == "-" else tuple(int(b) for b in blk.split("x"))
+        )
+        return cls(curve=curve, block=block, kind=kind)
+
+    def with_(self, **kw) -> "ScheduleChoice":
+        return dataclasses.replace(self, **kw)
+
+
+def as_choice(
+    choice, *, kind: str = "tile", curve: str = "hilbert",
+    block: tuple[int, ...] | None = None,
+) -> ScheduleChoice:
+    """Normalise ``str | None | ScheduleChoice`` into a ScheduleChoice.
+
+    A bare curve name becomes a choice with the given defaults; an
+    existing choice is kind-checked (a table of the wrong phase structure
+    must never drive a fused kernel silently).
+    """
+    if choice is None:
+        return ScheduleChoice(curve=curve, block=block, kind=kind)
+    if isinstance(choice, str):
+        return ScheduleChoice(curve=choice, block=block, kind=kind)
+    if not isinstance(choice, ScheduleChoice):
+        raise TypeError(f"expected curve name or ScheduleChoice, got {choice!r}")
+    if choice.kind != kind:
+        raise ValueError(
+            f"schedule kind mismatch: builder needs {kind!r}, "
+            f"choice says {choice.kind!r}"
+        )
+    return choice
+
+
+def _curve_name(curve) -> str:
+    """The curve axis of ``str | ScheduleChoice`` (builder entry points
+    accept either, so call sites migrate incrementally)."""
+    return curve.curve if isinstance(curve, ScheduleChoice) else curve
+
+
+def build_schedule(choice: ScheduleChoice, args: tuple) -> np.ndarray:
+    """Host table for ``choice`` given the kind's grid arguments.
+
+    ``args`` is the :attr:`repro.core.CurveProgram.schedule_args` tuple a
+    fused-app builder records: ``(shape,)`` for ``tile``, ``(shape,
+    strict)`` for ``triangle``, ``(nt,)`` for ``phased:*`` and ``(pt,
+    ct)`` for ``kmeans``.  This is the rebuild half of the
+    ``with_schedule`` swap point: the autotuner re-derives a program's
+    table under a different curve without knowing the app.
+    """
+    kind = choice.kind
+    if kind == "tile":
+        (shape,) = args
+        return tile_schedule_nd(choice.curve, shape)
+    if kind == "triangle":
+        shape, strict = args
+        return triangle_schedule_nd(choice.curve, shape, strict=strict)
+    if kind in ("phased:fw", "phased:cholesky"):
+        (nt,) = args
+        return phased_schedule(choice.curve, nt, kind=kind.split(":")[1])
+    if kind == "kmeans":
+        pt, ct = args
+        return kmeans_schedule(choice.curve, pt, ct)
+    raise ValueError(f"unknown schedule kind {kind!r}")
 
 
 @functools.lru_cache(maxsize=256)
@@ -43,21 +161,23 @@ def _cached_path(curve: str, shape: tuple[int, ...]) -> np.ndarray:
     return out
 
 
-def tile_schedule_nd(curve: str, shape: tuple[int, ...]) -> np.ndarray:
+def tile_schedule_nd(curve, shape: tuple[int, ...]) -> np.ndarray:
     """Visit order for a d-dimensional tile grid.  int32[(prod(shape), d)].
 
-    Dispatches through the curve registry; raises ``ValueError`` when the
-    curve does not support ``len(shape)`` dimensions (e.g. ``fur`` and
-    ``peano`` are 2-D constructions).  Results are LRU-cached and returned
-    as read-only arrays — copy before mutating.
+    ``curve`` is a registry name or a :class:`ScheduleChoice` (only its
+    curve axis matters here).  Dispatches through the curve registry;
+    raises ``ValueError`` when the curve does not support ``len(shape)``
+    dimensions (e.g. ``fur`` and ``peano`` are 2-D constructions).
+    Results are LRU-cached and returned as read-only arrays — copy before
+    mutating.
     """
     shape = tuple(int(s) for s in shape)
     if any(s <= 0 for s in shape):
         return np.zeros((0, len(shape)), dtype=np.int32)
-    return _cached_path(curve, shape)
+    return _cached_path(_curve_name(curve), shape)
 
 
-def tile_schedule(curve: str, n: int, m: int) -> np.ndarray:
+def tile_schedule(curve, n: int, m: int) -> np.ndarray:
     """(i, j) visit order for an n×m tile grid.  int32[(n*m, 2)].
 
     ``hilbert`` uses the FGF jump-over walker to clip the power-of-two
@@ -162,7 +282,7 @@ def phase_barrier_gaps(
 
 
 def tile_schedule_device(
-    curve: str,
+    curve,
     shape: tuple[int, ...],
     *,
     first_visit_axes: tuple[int, ...] | None = None,
@@ -176,7 +296,7 @@ def tile_schedule_device(
     :func:`mark_first_visits` flag column.
     """
     return _device_schedule(
-        curve, tuple(int(s) for s in shape), first_visit_axes
+        _curve_name(curve), tuple(int(s) for s in shape), first_visit_axes
     )
 
 
@@ -218,7 +338,7 @@ def schedule_cache_clear() -> None:
 
 
 def triangle_schedule_nd(
-    curve: str,
+    curve,
     shape: tuple[int, ...],
     *,
     axes: tuple[int, int] = (0, 1),
@@ -227,18 +347,24 @@ def triangle_schedule_nd(
     """Visit order for the cells of ``shape`` with x_a > x_b (or >=).
 
     Any dimension: e.g. the (i, j, k) tile grid of a triangular-solve or
-    Cholesky trailing update keeps only i > j panels.  ``hilbert`` runs
-    the d-dimensional FGF jump-over walker (true canonical Hilbert
-    values, O(log) re-entry, output-linear generation); other curves
-    filter their full schedule (the paper's naive strategy).
+    Cholesky trailing update keeps only i > j panels.  Algebra-backed
+    curves (``hilbert``, ``harmonious``, ``hcyclic``) run the
+    d-dimensional FGF jump-over walker (true order values, O(log)
+    re-entry, output-linear generation); other curves filter their full
+    schedule (the paper's naive strategy).
     """
+    curve = _curve_name(curve)
     shape = tuple(int(s) for s in shape)
     if any(s <= 0 for s in shape):
         return np.zeros((0, len(shape)), dtype=np.int32)
-    if curve == "hilbert":
+    from .curves_nd import algebra_names
+
+    if curve in algebra_names(len(shape)):
         from . import fgf_nd
 
-        out = fgf_nd.fgf_triangle_nd(shape, axes=axes, strict=strict)[:, 1:]
+        out = fgf_nd.fgf_triangle_nd(
+            shape, axes=axes, strict=strict, curve=curve
+        )[:, 1:]
     else:
         full = np.asarray(tile_schedule_nd(curve, shape), dtype=np.int64)
         a, b = axes
@@ -247,7 +373,7 @@ def triangle_schedule_nd(
     return np.ascontiguousarray(out.astype(np.int32))
 
 
-def triangle_schedule(curve: str, n: int, *, strict: bool = True) -> np.ndarray:
+def triangle_schedule(curve, n: int, *, strict: bool = True) -> np.ndarray:
     """Visit order for the lower triangle i > j (or i >= j) of n×n
     (2-D legacy interface; see :func:`triangle_schedule_nd`)."""
     return triangle_schedule_nd(curve, (int(n), int(n)), strict=strict)
@@ -262,7 +388,7 @@ CHOLESKY_PHASES = ("diag", "panel", "trailing")
 PHASED_KINDS = {"fw": FW_PHASES, "cholesky": CHOLESKY_PHASES}
 
 
-def phased_schedule(curve: str, nt: int, *, kind: str = "fw") -> np.ndarray:
+def phased_schedule(curve, nt: int, *, kind: str = "fw") -> np.ndarray:
     """One table for ALL k-blocks of a phased factorisation/closure.
 
     The paper decomposes each k iteration of Floyd-Warshall/Cholesky into
@@ -293,7 +419,7 @@ def phased_schedule(curve: str, nt: int, *, kind: str = "fw") -> np.ndarray:
     hazard-free under ANY within-phase order.  Results are LRU-cached and
     read-only.
     """
-    return _phased_schedule_host(curve, int(nt), kind)
+    return _phased_schedule_host(_curve_name(curve), int(nt), kind)
 
 
 @functools.lru_cache(maxsize=128)
@@ -350,7 +476,7 @@ def _phased_schedule_host(curve: str, nt: int, kind: str) -> np.ndarray:
 KMEANS_PHASES = ("assign", "update")
 
 
-def kmeans_schedule(curve: str, pt: int, ct: int) -> np.ndarray:
+def kmeans_schedule(curve, pt: int, ct: int) -> np.ndarray:
     """One table for a fully-fused Lloyd iteration.  int32[steps, 4].
 
     Columns ``(phase, i, j, first_visit)`` over a ``pt × ct``
@@ -374,7 +500,7 @@ def kmeans_schedule(curve: str, pt: int, ct: int) -> np.ndarray:
     a phase; asserted), the kmeans analogue of the FW/Cholesky
     order-free-parts invariant.  Results are LRU-cached and read-only.
     """
-    return _kmeans_schedule_host(curve, int(pt), int(ct))
+    return _kmeans_schedule_host(_curve_name(curve), int(pt), int(ct))
 
 
 @functools.lru_cache(maxsize=128)
@@ -408,9 +534,9 @@ def _kmeans_schedule_host(curve: str, pt: int, ct: int) -> np.ndarray:
     return out
 
 
-def kmeans_schedule_device(curve: str, pt: int, ct: int):
+def kmeans_schedule_device(curve, pt: int, ct: int):
     """Device-resident upload of :func:`kmeans_schedule` (LRU-cached)."""
-    return _kmeans_schedule_dev(curve, int(pt), int(ct))
+    return _kmeans_schedule_dev(_curve_name(curve), int(pt), int(ct))
 
 
 @functools.lru_cache(maxsize=128)
@@ -434,9 +560,9 @@ def phase_barriers(sched: np.ndarray, *, kind: str = "fw") -> np.ndarray:
     return s[:, 1] * nphases + s[:, 0]
 
 
-def phased_schedule_device(curve: str, nt: int, *, kind: str = "fw"):
+def phased_schedule_device(curve, nt: int, *, kind: str = "fw"):
     """Device-resident upload of :func:`phased_schedule` (LRU-cached)."""
-    return _phased_schedule_dev(curve, int(nt), kind)
+    return _phased_schedule_dev(_curve_name(curve), int(nt), kind)
 
 
 @functools.lru_cache(maxsize=128)

@@ -1,0 +1,398 @@
+"""Measured schedule autotuner: close the loop from locality reporting
+to a speed feature (ROADMAP "Curve portfolio + schedule autotuner").
+
+The benchmarks have always *reported* that traversal order moves HBM
+traffic (``miss_curve``, ``operand_reloads``); this module makes the
+measurement actionable.  Per ``(app, shape-bucket, backend)`` it
+
+1. enumerates candidate :class:`repro.core.ScheduleChoice` values over
+   the registered curve portfolio (``candidate_choices``),
+2. pre-ranks them with the existing reuse-distance machinery
+   (:func:`repro.core.miss_curve` on a proxy tile grid — cheap, host
+   only) so only the most promising ``max_measure`` candidates pay for
+   wall-clock measurement,
+3. measures warm time (one warm-up dispatch, then the median of timed
+   ``block_until_ready`` runs) through the public ops wrappers, and
+4. persists the winner in an on-disk JSON tuning cache.
+
+Consultation is split to keep the bit-identity guarantee trivial:
+
+* ``launch(..., choice="auto")`` is **consult-only** — it looks up the
+  persisted winner for the program's (app, shapes, backend) and swaps
+  the curve axis through the ``with_schedule`` swap point.  With the
+  cache empty, disabled, or holding the default, the program dispatches
+  byte-for-byte as today.  ``launch`` never measures.
+* Explicit measurement happens only through :func:`autotune_app` (or the
+  ``autotune`` bench suite), which callers invoke deliberately.
+
+Cache file: ``$REPRO_TUNING_CACHE`` when set (the empty string, ``0`` or
+``off`` disables persistence entirely), else
+``~/.cache/repro/tuning.json``.  The in-memory layer is registered with
+:func:`repro.core.register_schedule_cache`, so
+``schedule_cache_clear()`` drops it like every other schedule cache
+(tests that re-point the env var mid-process rely on this).
+
+Only the *curve* axis is swappable at launch: block sizes alter specs
+and padding, so the ops wrappers resolve ``choice.block`` before
+padding, and :func:`apply_choice` deliberately ignores block deltas.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (
+    ScheduleChoice,
+    available_curves,
+    build_schedule,
+    kmeans_schedule_device,
+    miss_curve,
+    phased_schedule_device,
+    register_schedule_cache,
+    tile_schedule_device,
+    tile_schedule_nd,
+)
+from repro.core.program import CurveProgram
+
+__all__ = [
+    "apply_choice",
+    "autotune_app",
+    "cache_path",
+    "candidate_choices",
+    "locality_rank",
+    "lookup",
+    "record",
+    "resolve_program_choice",
+    "shape_bucket",
+    "tuning_cache_clear",
+]
+
+ENV_VAR = "REPRO_TUNING_CACHE"
+_DISABLED = ("", "0", "off", "none")
+
+# schedule kind and default choice per tunable app (the ops wrappers'
+# current defaults — the guaranteed fallback the bit-identity suites pin)
+APP_KINDS = {
+    "matmul": "tile",
+    "kmeans_lloyd": "kmeans",
+    "simjoin_counts": "triangle",
+    "simjoin_pairs": "triangle",
+    "floyd_warshall": "phased:fw",
+    "cholesky": "phased:cholesky",
+}
+APP_DEFAULT_CURVES = {
+    "matmul": "fur",
+    "kmeans_lloyd": "fur",
+    "simjoin_counts": "hilbert",
+    "simjoin_pairs": "hilbert",
+    "floyd_warshall": "hilbert",
+    "cholesky": "hilbert",
+}
+_APP_BY_KIND = {
+    "phased:fw": "floyd_warshall",
+    "phased:cholesky": "cholesky",
+    "kmeans": "kmeans_lloyd",
+    "triangle": "simjoin_pairs",
+    "tile": "matmul",
+}
+
+
+def cache_path() -> Path | None:
+    """Resolved tuning-cache file path, or ``None`` when persistence is
+    disabled (``$REPRO_TUNING_CACHE`` set to empty/``0``/``off``)."""
+    env = os.environ.get(ENV_VAR)
+    if env is not None:
+        if env.strip().lower() in _DISABLED:
+            return None
+        return Path(env).expanduser()
+    return Path("~/.cache/repro/tuning.json").expanduser()
+
+
+class _TuningMem:
+    """In-memory layer over the JSON file: loaded at most once per
+    (path), dropped by ``schedule_cache_clear()`` / ``cache_clear()``."""
+
+    def __init__(self):
+        self._data: dict | None = None
+        self._path: Path | None = None
+
+    def data(self) -> dict:
+        path = cache_path()
+        if self._data is None or path != self._path:
+            self._path = path
+            self._data = {}
+            if path is not None and path.is_file():
+                try:
+                    raw = json.loads(path.read_text())
+                    if isinstance(raw, dict):
+                        self._data = dict(raw.get("entries", {}))
+                except (OSError, ValueError):
+                    self._data = {}  # unreadable cache == empty cache
+        return self._data
+
+    def cache_clear(self) -> None:
+        self._data = None
+        self._path = None
+
+
+_MEM = register_schedule_cache(_TuningMem())
+
+
+def tuning_cache_clear() -> None:
+    """Drop the in-memory tuning layer (the file is untouched)."""
+    _MEM.cache_clear()
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def shape_bucket(shapes) -> str:
+    """Power-of-two shape bucket: each dim of each operand shape rounds
+    up to the next power of two, e.g. ``((100, 3),)`` → ``"128x4"``.
+    Tuning generalises across nearby sizes because the schedule's tile
+    grid — not the exact element count — drives the traversal economy.
+    """
+    if shapes and isinstance(shapes[0], (int, np.integer)):
+        shapes = (shapes,)
+    return "+".join(
+        "x".join(str(_pow2(d)) for d in shape) for shape in shapes
+    )
+
+
+def _key(app: str, shapes, backend: str | None) -> str:
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return f"{app}|{backend}|{shape_bucket(shapes)}"
+
+
+def lookup(app: str, shapes, *, backend: str | None = None) -> ScheduleChoice | None:
+    """The persisted winner for ``(app, shape-bucket, backend)``, or
+    ``None`` (cache empty, disabled, or no entry) — the caller's default
+    then stands."""
+    entry = _MEM.data().get(_key(app, shapes, backend))
+    if not entry:
+        return None
+    try:
+        return ScheduleChoice.from_key(entry["choice"])
+    except (KeyError, ValueError):
+        return None
+
+
+def record(
+    app: str,
+    shapes,
+    choice: ScheduleChoice,
+    ms: float,
+    *,
+    default_ms: float | None = None,
+    backend: str | None = None,
+) -> None:
+    """Persist a measured winner (in-memory + JSON file, atomically via
+    a same-directory temp file).  No-op on the file when persistence is
+    disabled; the in-memory layer still updates so a process can tune
+    and consult without touching disk."""
+    key = _key(app, shapes, backend)
+    entry = {"choice": choice.key(), "ms": float(ms)}
+    if default_ms is not None:
+        entry["default_ms"] = float(default_ms)
+    data = _MEM.data()
+    data[key] = entry
+    path = cache_path()
+    if path is None:
+        return
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(json.dumps({"version": 1, "entries": data}, indent=1))
+    tmp.replace(path)
+
+
+# ---------------------------------------------------------------------------
+# Choice application: the launch()-side consult-only half
+# ---------------------------------------------------------------------------
+
+def _device_schedule_for(choice: ScheduleChoice, args: tuple):
+    """Device table for (choice, schedule_args), through the per-kind
+    LRU-cached device builders where they exist."""
+    kind = choice.kind
+    if kind in ("phased:fw", "phased:cholesky"):
+        return phased_schedule_device(choice.curve, args[0], kind=kind.split(":")[1])
+    if kind == "kmeans":
+        return kmeans_schedule_device(choice.curve, *args)
+    if kind == "tile":
+        return tile_schedule_device(choice.curve, args[0])
+    import jax.numpy as jnp
+
+    return jnp.asarray(build_schedule(choice, args), dtype=jnp.int32)
+
+
+def apply_choice(program: CurveProgram, choice) -> CurveProgram:
+    """Swap ``program``'s schedule to ``choice``'s curve through
+    ``with_schedule`` — the declaration (kernel, specs, phases,
+    reference) carries over, only the traversal order changes.
+
+    Requires the program to have recorded its build ``choice`` and
+    ``schedule_args``; the kinds must agree.  Block deltas are ignored
+    (blocks are resolved upstream, before padding).  A same-curve choice
+    returns the program unchanged — the bit-identity fallback.
+    """
+    cur = program.choice
+    if cur is None or not program.schedule_args:
+        raise ValueError(
+            f"{program.name}: no recorded choice/schedule_args to swap from"
+        )
+    if isinstance(choice, str):
+        choice = cur.with_(curve=choice)
+    if choice.kind != cur.kind:
+        raise ValueError(
+            f"{program.name}: kind mismatch {choice.kind!r} != {cur.kind!r}"
+        )
+    choice = choice.with_(block=cur.block)
+    if choice.curve == cur.curve:
+        return program
+    sched = _device_schedule_for(choice, program.schedule_args)
+    return program.with_schedule(sched, choice=choice)
+
+
+def resolve_program_choice(
+    program: CurveProgram, choice, operands
+) -> CurveProgram:
+    """``launch()``'s choice hook.  ``choice`` semantics:
+
+    * ``None`` — never reaches here (launch short-circuits).
+    * ``"auto"`` — consult the tuning cache for the program's app (by
+      recorded choice kind), the operand shapes and the active backend.
+      Any miss, unusable entry, or rebuild failure falls back to the
+      program exactly as built — the guaranteed bit-identical default.
+    * a :class:`ScheduleChoice` or curve name — apply strictly (raises
+      on kind mismatch or missing swap metadata).
+    """
+    if choice == "auto":
+        cur = program.choice
+        app = _APP_BY_KIND.get(cur.kind) if cur is not None else None
+        if app is None or not program.schedule_args:
+            return program
+        best = lookup(app, tuple(tuple(op.shape) for op in operands))
+        if best is None or best.kind != cur.kind:
+            return program
+        try:
+            return apply_choice(program, best)
+        except (ValueError, KeyError):
+            return program  # corrupt/unsupported entry: default stands
+    return apply_choice(program, choice)
+
+
+# ---------------------------------------------------------------------------
+# Measurement: the explicit autotune_app() half
+# ---------------------------------------------------------------------------
+
+def locality_rank(curve: str, *, grid: int = 16, cache: int = 8) -> int:
+    """Host-only pre-rank: LRU misses of the curve's ``grid×grid`` tile
+    schedule at one representative cache size (the existing
+    reuse-distance machinery, :func:`repro.core.miss_curve`).  Cheaper
+    curves measure first; ties in wall clock break toward better
+    clustering."""
+    return int(miss_curve(tile_schedule_nd(curve, (grid, grid)), [cache])[cache])
+
+
+def candidate_choices(
+    app: str, *, curves=None, blocks=None
+) -> list[ScheduleChoice]:
+    """The candidate set for one app: its schedule kind crossed with the
+    curve portfolio (default: every registered 2-D curve, the app's
+    default first) and optional block overrides."""
+    kind = APP_KINDS[app]
+    default = APP_DEFAULT_CURVES[app]
+    if curves is None:
+        curves = available_curves(2)
+    # the app's true default ALWAYS measures first — rows[0] is the
+    # baseline that default_ms and the tuned_speedup gate are named
+    # after, even when the caller passes an explicit curve portfolio
+    curves = [default] + [c for c in curves if c != default]
+    out = []
+    for cv in curves:
+        if blocks:
+            out.extend(
+                ScheduleChoice(curve=cv, block=tuple(b), kind=kind)
+                for b in blocks
+            )
+        else:
+            out.append(ScheduleChoice(curve=cv, kind=kind))
+    return out
+
+
+def measure(fn, *args, repeats: int = 3, **kw) -> float:
+    """Median warm milliseconds of ``fn(*args, **kw)``: one un-timed
+    warm-up (pays trace/compile), then ``repeats`` timed
+    ``block_until_ready`` runs."""
+    import jax
+
+    jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(times))
+
+
+def autotune_app(
+    app: str,
+    *args,
+    candidates=None,
+    curves=None,
+    max_measure: int = 4,
+    repeats: int = 3,
+    persist: bool = True,
+    **app_kwargs,
+) -> dict:
+    """Measure candidate choices for one ops-wrapper app and persist the
+    winner.
+
+    ``app`` names a wrapper in :mod:`repro.kernels.ops` that accepts
+    ``choice=`` (``floyd_warshall``, ``cholesky``, ``kmeans_lloyd``,
+    ``simjoin_counts``, ``simjoin_pairs``, ``matmul``); ``args`` /
+    ``app_kwargs`` are its call arguments.  Candidates beyond the
+    default are pre-ranked by :func:`locality_rank` and only the best
+    ``max_measure`` (default always included) pay for wall-clock
+    measurement.  Returns ``{"app", "key", "default_ms", "rows",
+    "winner"}`` where ``rows`` is one measurement per candidate —
+    the ``autotune`` bench suite serialises them directly.
+    """
+    from . import ops
+
+    if app not in APP_KINDS:
+        raise ValueError(f"unknown tunable app {app!r}; one of {sorted(APP_KINDS)}")
+    fn = getattr(ops, app)
+    shapes = tuple(
+        tuple(a.shape) for a in args if hasattr(a, "shape")
+    )
+    cands = candidates or candidate_choices(app, curves=curves)
+    default = cands[0]
+    rest = sorted(cands[1:], key=lambda c: locality_rank(c.curve))
+    cands = [default] + rest[: max(max_measure - 1, 0)]
+    rows = []
+    for cand in cands:
+        ms = measure(fn, *args, choice=cand, repeats=repeats, **app_kwargs)
+        rows.append({"app": app, "choice": cand.key(), "warm_ms": ms})
+    default_ms = rows[0]["warm_ms"]
+    best = min(rows, key=lambda r: r["warm_ms"])
+    winner = ScheduleChoice.from_key(best["choice"])
+    if persist:
+        record(app, shapes, winner, best["warm_ms"], default_ms=default_ms)
+    for r in rows:
+        r["chosen"] = r["choice"] == best["choice"]
+        r["default"] = r["choice"] == rows[0]["choice"]
+    return {
+        "app": app,
+        "key": _key(app, shapes, None),
+        "default_ms": default_ms,
+        "rows": rows,
+        "winner": best["choice"],
+    }

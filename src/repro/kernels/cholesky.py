@@ -41,7 +41,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .pallas_compat import CompilerParams
 
-from repro.core import CHOLESKY_PHASES, phased_schedule, phased_schedule_device
+from repro.core import (
+    CHOLESKY_PHASES,
+    as_choice,
+    phased_schedule,
+    phased_schedule_device,
+)
 from repro.core.program import CurveProgram
 
 from .launch import launch
@@ -139,11 +144,18 @@ def _fused_chol_kernel(sched_ref, a_in_ref, o_ref, diag_ref, panel_ref, *, b):
         )
 
 
-def cholesky_program(curve: str, nt: int, b: int) -> CurveProgram:
+def cholesky_program(choice, nt: int, b: int) -> CurveProgram:
     """The fused-Cholesky declaration: L_kk plus the finished L_*k panel
     carried in VMEM scratch (``b·b + b·n`` f32 — the residency the ops
     wrapper gates on), every matrix access through the aliased output
-    ref, trailing SYRK tiles in FGF-Hilbert triangle order."""
+    ref, trailing SYRK tiles in FGF-Hilbert triangle order.
+
+    ``choice`` is a curve name or a ``phased:cholesky``
+    :class:`repro.core.ScheduleChoice`; the normalised choice and grid
+    args are recorded on the program for the ``with_schedule`` curve
+    swap (see :func:`repro.kernels.floyd_warshall.fw_program`)."""
+    choice = as_choice(choice, kind="phased:cholesky").with_(block=(int(b),))
+    curve = choice.curve
     n = nt * b
     return CurveProgram(
         name=f"cholesky_fused_{curve}",
@@ -160,6 +172,8 @@ def cholesky_program(curve: str, nt: int, b: int) -> CurveProgram:
         phases=CHOLESKY_PHASES,
         columns=("phase", "k", "i", "j", "first_visit"),
         reference=lambda a, **kw: cholesky_blocked_reference(a, **kw),
+        choice=choice,
+        schedule_args=(nt,),
     )
 
 

@@ -52,6 +52,7 @@ from .pallas_compat import CompilerParams
 
 from repro.core import (
     FW_PHASES,
+    as_choice,
     phased_schedule,
     phased_schedule_device,
     tile_schedule,
@@ -154,13 +155,21 @@ def _fused_fw_kernel(sched_ref, d_in_ref, o_ref, diag_ref, row_ref, col_ref, *, 
         o_ref[...] = jnp.minimum(d, _minplus(dik, dkj)).astype(o_ref.dtype)
 
 
-def fw_program(curve: str, nt: int, b: int) -> CurveProgram:
+def fw_program(choice, nt: int, b: int) -> CurveProgram:
     """The fused-FW declaration: one grid step per phased-schedule row,
     per-k state (closed diagonal + finished row/column panels) in VMEM
     scratch, all RMW through the aliased output ref.  The VMEM bound of
     the fused form — ``b·b + 2·b·n`` f32 scratch on top of the streamed
     (b, b) blocks — is what :meth:`CurveProgram.vmem_bytes` reports and
-    the ops wrapper gates on."""
+    the ops wrapper gates on.
+
+    ``choice`` is a curve name or a ``phased:fw``
+    :class:`repro.core.ScheduleChoice`; the normalised choice (block
+    pinned to the actual ``b``) and the grid args are recorded on the
+    program, so ``launch(choice=...)`` can rebuild the table under a
+    different curve through the ``with_schedule`` swap point."""
+    choice = as_choice(choice, kind="phased:fw").with_(block=(int(b),))
+    curve = choice.curve
     n = nt * b
     return CurveProgram(
         name=f"fw_fused_{curve}",
@@ -178,6 +187,8 @@ def fw_program(curve: str, nt: int, b: int) -> CurveProgram:
         phases=FW_PHASES,
         columns=("phase", "k", "i", "j", "first_visit"),
         reference=lambda d, **kw: floyd_warshall_blocked_reference(d, **kw),
+        choice=choice,
+        schedule_args=(nt,),
     )
 
 

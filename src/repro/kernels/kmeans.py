@@ -40,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core import hilbert_sort_key, register_schedule_cache
+from repro.core import as_choice, hilbert_sort_key, register_schedule_cache
 from repro.core.program import CurveProgram
 
 from .launch import launch
@@ -330,7 +330,7 @@ def _fused_lloyd_kernel(
 
 def kmeans_lloyd_program(
     schedule, *, pt: int, ct: int, bp: int, bc: int, D: int,
-    k_valid: int | None, n_valid: int | None,
+    k_valid: int | None, n_valid: int | None, choice=None,
 ) -> CurveProgram:
     """The fused-Lloyd declaration (one iteration = one dispatch).
 
@@ -338,7 +338,19 @@ def kmeans_lloyd_program(
     per-point-tile (min, argmin) blocks through the output refs, and
     accumulates into a single resident (Kp, D) + (1, Kp) f32 block pair
     — the ``K·D + K`` f32 residency the ops wrapper gates on.
+
+    ``choice`` (a ``kmeans``-kind :class:`repro.core.ScheduleChoice` or
+    curve name) records which curve generated ``schedule``; the grid
+    args ``(pt, ct)`` land in ``schedule_args`` so the table can be
+    rebuilt under another curve at the ``with_schedule`` swap point.
+    The schedule itself stays a caller-provided traced operand (it rides
+    through ``jax.lax.scan``), so the recorded choice is metadata — the
+    launcher only acts on it when explicitly asked to swap curves.
     """
+    if choice is not None:
+        choice = as_choice(choice, kind="kmeans").with_(
+            block=(int(bp), int(bc))
+        )
     Kp = ct * bc
     return CurveProgram(
         name="kmeans_lloyd_fused",
@@ -366,6 +378,8 @@ def kmeans_lloyd_program(
         phases=("assign", "update"),
         columns=("phase", "i", "j", "first_visit"),
         reference=lambda *a, **kw: kmeans_lloyd_reference(*a, **kw),
+        choice=choice,
+        schedule_args=(int(pt), int(ct)),
     )
 
 

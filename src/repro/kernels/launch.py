@@ -55,7 +55,10 @@ def resolve_interpret(flag: bool | None) -> bool:
     return bool(flag)
 
 
-def launch(program: CurveProgram, *operands, interpret: bool | None = None):
+def launch(
+    program: CurveProgram, *operands,
+    interpret: bool | None = None, choice=None,
+):
     """Dispatch ``program`` over ``operands`` as ONE ``pallas_call``.
 
     Builds the scalar-prefetch grid spec from the declaration (grid
@@ -63,7 +66,21 @@ def launch(program: CurveProgram, *operands, interpret: bool | None = None):
     ``arbitrary`` (schedule order is data, not structure — XLA must not
     reorder it), applies the program's donation map, and prepends the
     schedule as the prefetch operand.
+
+    ``choice`` makes the traversal order tunable at the dispatch site:
+    ``None`` (default) launches the program exactly as built;
+    ``"auto"`` consults the persisted tuning cache
+    (:mod:`repro.kernels.autotune`) for this app/shape-bucket/backend
+    and swaps the winning curve in through the program's
+    ``with_schedule`` swap point — with the cache empty or disabled the
+    dispatch is bit-identical to the default; an explicit
+    :class:`repro.core.ScheduleChoice` (or curve name) swaps strictly.
+    Launch never measures — measurement is :func:`autotune_app`'s job.
     """
+    if choice is not None:
+        from .autotune import resolve_program_choice
+
+        program = resolve_program_choice(program, choice, operands)
     grid = program.grid if program.grid is not None else (program.steps,)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

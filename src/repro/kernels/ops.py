@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    ScheduleChoice,
     fits_vmem,
     get_curve,
     kmeans_schedule,
@@ -70,6 +71,41 @@ from .simjoin import (
 DEFAULT_CURVE = "fur"  # overlay-grid Hilbert: native n×m, unit steps
 
 
+def _app_choice(choice, app: str, *arrays) -> ScheduleChoice | None:
+    """Resolve a wrapper's ``choice=`` kwarg into a concrete
+    :class:`repro.core.ScheduleChoice`, or ``None`` for "use the
+    defaults" (the guaranteed bit-identical path).
+
+    ``None`` → defaults.  ``"auto"`` → consult the persisted tuning
+    cache for (app, shape-bucket, backend); a miss, a disabled cache or
+    a wrong-kind entry all resolve to ``None``.  An explicit
+    ScheduleChoice is kind-checked and returned as-is.  Block sizes in
+    the returned choice override the wrapper's block kwargs *before*
+    padding — that is why this resolution lives here and not in
+    ``launch()``.
+    """
+    from .autotune import APP_KINDS, lookup
+
+    kind = APP_KINDS[app]
+    if choice is None:
+        return None
+    if isinstance(choice, str):
+        if choice != "auto":
+            raise ValueError(
+                f"choice= takes None, 'auto' or a ScheduleChoice; use "
+                f"curve= for a bare curve name (got {choice!r})"
+            )
+        found = lookup(app, tuple(tuple(a.shape) for a in arrays))
+        return found if found is not None and found.kind == kind else None
+    if not isinstance(choice, ScheduleChoice):
+        raise TypeError(f"choice= expects a ScheduleChoice, got {choice!r}")
+    if choice.kind != kind:
+        raise ValueError(
+            f"{app} needs a {kind!r} choice, got {choice.kind!r}"
+        )
+    return choice
+
+
 def _pad2(x: jax.Array, r: int, c: int) -> jax.Array:
     pr = (-x.shape[0]) % r
     pc = (-x.shape[1]) % c
@@ -110,9 +146,15 @@ def matmul(
     bk: int = 256,
     out_dtype=None,
     schedule_ndim: int = 2,
+    choice=None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """C = A @ B with a curve-scheduled Pallas kernel (paper §1/§7).
+
+    ``choice`` (``None`` | ``"auto"`` | a ``tile``-kind
+    :class:`repro.core.ScheduleChoice`) overrides ``curve`` and the
+    block sizes as one tunable value; ``"auto"`` consults the autotuner
+    cache and falls back to the defaults on a miss (bit-identical).
 
     ``schedule_ndim=2`` (default fast path): the curve orders the (i, j)
     output tiles and k runs innermost with a VMEM-resident accumulator —
@@ -135,6 +177,11 @@ def matmul(
     K2, N = b.shape
     assert K == K2
     assert schedule_ndim in (2, 3), schedule_ndim
+    ch = _app_choice(choice, "matmul", a, b)
+    if ch is not None:
+        curve = ch.curve
+        if ch.block:
+            bm, bn, bk = (tuple(ch.block) + (bn, bk))[:3]
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
     ap = _pad2(a, bm, bk)
     bp = _pad2(b, bk, bn)
@@ -352,9 +399,15 @@ def kmeans_lloyd(
     mesh=None,
     shard_exact: bool = True,
     shard_reduce: str | None = None,
+    choice=None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Full Lloyd k-means: (centroids f32[k, D], assignment int32[N]).
+
+    ``choice`` (``None`` | ``"auto"`` | a ``kmeans``-kind
+    :class:`repro.core.ScheduleChoice`) overrides ``curve`` and
+    ``(bp, bc)`` as one tunable value; ``"auto"`` consults the
+    autotuner cache, falling back to the defaults on a miss.
 
     ``fused=True`` (default) runs ONE phase-fused ``pallas_call`` per
     iteration — assignment AND per-centroid sum/count accumulation off
@@ -383,6 +436,11 @@ def kmeans_lloyd(
     runs all iterations in sorted order, and maps the assignment back
     through the inverse permutation at the end.
     """
+    ch = _app_choice(choice, "kmeans_lloyd", x)
+    if ch is not None:
+        curve = ch.curve
+        if ch.block:
+            bp, bc = (tuple(ch.block) + (bc,))[:2]
     if mesh is not None:
         if not fused:
             raise ValueError(
@@ -421,7 +479,7 @@ def kmeans_lloyd(
         sched = kmeans_schedule_device(curve, pt, ct)
         prog = kmeans_lloyd_program(
             sched, pt=pt, ct=ct, bp=bp, bc=bc, D=D,
-            k_valid=k_valid, n_valid=n_valid,
+            k_valid=k_valid, n_valid=n_valid, choice=curve,
         )
         cnorm_probe = jax.ShapeDtypeStruct((1, cp.shape[0]), jnp.float32)
         fused = fits_vmem(prog, xp, cp, cnorm_probe)
@@ -445,6 +503,7 @@ def simjoin_counts(
     curve: str = "hilbert",
     bp: int = 256,
     hilbert_order: bool = False,
+    choice=None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """ε-join neighbour counts with FGF-Hilbert triangle scheduling.
@@ -452,10 +511,19 @@ def simjoin_counts(
     ``hilbert_order=True`` sorts the points by their d-dimensional
     Hilbert key first, concentrating the join's hits near the tile-grid
     diagonal (counts come back in the original point order).
+
+    ``choice`` (``None`` | ``"auto"`` | a ``triangle``-kind
+    :class:`repro.core.ScheduleChoice`) overrides ``curve`` and ``bp``
+    as one tunable value (autotuner contract; defaults on a miss).
     """
     N, D = x.shape
     if N == 0:
         return jnp.zeros((0,), dtype=jnp.int32)
+    ch = _app_choice(choice, "simjoin_counts", x)
+    if ch is not None:
+        curve = ch.curve
+        if ch.block:
+            bp = ch.block[0]
     if hilbert_order:
         # the O(N log N) point permutation is LRU-cached on the quantised
         # grid, so repeated joins over one point set don't recompute it
@@ -487,9 +555,14 @@ def simjoin_pairs(
     bp: int = 256,
     hilbert_order: bool = False,
     mesh=None,
+    choice=None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """The ε-join's actual output: int32[P, 2] index pairs, i > j.
+
+    ``choice`` (``None`` | ``"auto"`` | a ``triangle``-kind
+    :class:`repro.core.ScheduleChoice`) overrides ``curve`` and ``bp``
+    as one tunable value (autotuner contract; defaults on a miss).
 
     Classic two-pass emission, both passes FGF-Hilbert tile-scheduled:
     pass 1 is the count kernel (:func:`simjoin_tile_hits_swizzled`),
@@ -522,6 +595,11 @@ def simjoin_pairs(
     outer ``jax.jit`` (P must be concrete), which is inherent to any
     exact-size join output.
     """
+    ch = _app_choice(choice, "simjoin_pairs", x)
+    if ch is not None:
+        curve = ch.curve
+        if ch.block:
+            bp = ch.block[0]
     if mesh is not None:
         from .sharded import simjoin_pairs_sharded
 
@@ -566,9 +644,14 @@ def floyd_warshall(
     b: int = 128,
     curve: str = "hilbert",
     fused: bool = True,
+    choice=None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """All-pairs shortest paths over an (n, n) adjacency matrix.
+
+    ``choice`` (``None`` | ``"auto"`` | a ``phased:fw``-kind
+    :class:`repro.core.ScheduleChoice`) overrides ``curve`` and ``b``
+    as one tunable value (autotuner contract; defaults on a miss).
 
     ``fused=True`` (default) runs the phase-fused single-``pallas_call``
     kernel; ``fused=False`` the per-k-block reference (bit-identical in
@@ -578,6 +661,11 @@ def floyd_warshall(
     sliced back).
     """
     n = d.shape[0]
+    ch = _app_choice(choice, "floyd_warshall", d)
+    if ch is not None:
+        curve = ch.curve
+        if ch.block:
+            b = ch.block[0]
     bb, npad = _block_and_pad(n, b, mult=_FW_CHUNK)
     dp = d.astype(jnp.float32)
     if npad != n:
@@ -598,9 +686,14 @@ def cholesky(
     b: int = 128,
     curve: str = "hilbert",
     fused: bool = True,
+    choice=None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Lower Cholesky factor of an (n, n) SPD matrix.
+
+    ``choice`` (``None`` | ``"auto"`` | a ``phased:cholesky``-kind
+    :class:`repro.core.ScheduleChoice`) overrides ``curve`` and ``b``
+    as one tunable value (autotuner contract; defaults on a miss).
 
     ``fused=True`` (default) runs the phase-fused single-``pallas_call``
     kernel; ``fused=False`` the per-k-block reference (bit-identical in
@@ -610,6 +703,11 @@ def cholesky(
     the factor sliced back).
     """
     n = a.shape[0]
+    ch = _app_choice(choice, "cholesky", a)
+    if ch is not None:
+        curve = ch.curve
+        if ch.block:
+            b = ch.block[0]
     # mult=8 keeps auto-picked blocks aligned to Mosaic's (8, 128) tiling
     # (the fused kernel itself has no chunking constraint, the hardware does)
     bb, npad = _block_and_pad(n, b, mult=8)

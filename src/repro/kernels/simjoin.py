@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core import as_choice
 from repro.core.program import CurveProgram, fits_vmem
 
 from .launch import launch
@@ -146,16 +147,24 @@ def simjoin_tile_hits_swizzled(
 
 
 def simjoin_hits_program(
-    schedule, *, eps: float, bp: int, D: int, n_valid: int | None
+    schedule, *, eps: float, bp: int, D: int, n_valid: int | None,
+    choice=None,
 ) -> CurveProgram:
     """Pass-1 declaration: one (1, bp) row/col partial pair per schedule
     step, each written exactly once — safe under any order, so the SAME
     program serves the single-core triangle schedule and each shard's
-    curve-range slice of it (kernels/sharded.py)."""
+    curve-range slice of it (kernels/sharded.py).  ``choice`` (a
+    ``triangle``-kind :class:`repro.core.ScheduleChoice` or curve name)
+    records which curve ordered the tile pairs — metadata for the
+    program signature; the join's curve axis is resolved upstream in
+    ops.py because the two-pass driver host-syncs between dispatches."""
+    if choice is not None:
+        choice = as_choice(choice, kind="triangle").with_(block=(int(bp),))
     steps = schedule.shape[0]
     return CurveProgram(
         name="simjoin_hits",
         schedule=schedule,
+        choice=choice,
         kernel=functools.partial(
             _join_kernel, eps2=float(eps) ** 2, n_valid=n_valid
         ),
@@ -335,7 +344,7 @@ def simjoin_emit_swizzled(
 
 def simjoin_emit_program(
     table, *, eps: float, bp: int, D: int, cap: int, p_pad: int,
-    n_valid: int | None,
+    n_valid: int | None, choice=None,
 ) -> CurveProgram:
     """Pass-2 declaration: the single resident (p_pad, 2) pair buffer is
     masked-RMW'd a cap-row window per step at prefetched offsets.  The
@@ -343,9 +352,12 @@ def simjoin_emit_program(
     the VMEM budget (falling back to the dense oracle).  With per-shard
     tables carrying *local* offsets, the same program is the emission
     half of the distributed two-pass join."""
+    if choice is not None:
+        choice = as_choice(choice, kind="triangle").with_(block=(int(bp),))
     return CurveProgram(
         name="simjoin_emit",
         schedule=table,
+        choice=choice,
         kernel=functools.partial(
             _emit_kernel, eps2=float(eps) ** 2, n_valid=n_valid, cap=cap, bp=bp
         ),

@@ -135,6 +135,14 @@ class StreamKMeans:
     (bit-identical to ``ops.kmeans_lloyd`` over a fully-inserted set);
     < 1.0 = exponentially decayed sufficient statistics (online Lloyd —
     old mass fades, the service tracks drifting streams).
+
+    ``reseed_every=n`` arms the tick core's periodic trigger
+    (:meth:`TickCore.every`): every n ticks, clusters that captured no
+    residents in the last assignment are re-seeded from the largest
+    cluster's farthest members (a split of the heaviest cluster — the
+    classic empty-cluster repair).  On a stream that never produces an
+    empty cluster the trigger never fires a repair, so the service stays
+    bit-identical to one built without it (differential-tested).
     """
 
     def __init__(
@@ -147,6 +155,7 @@ class StreamKMeans:
         bc: int = 128,
         seed: int = 0,
         coalesce: str = "hilbert",
+        reseed_every: int | None = None,
         interpret: bool | None = None,
         stats_capacity: int = 256,
     ):
@@ -156,6 +165,10 @@ class StreamKMeans:
             raise ValueError(f"decay must be in (0, 1], got {decay}")
         if coalesce not in ("hilbert", "fifo"):
             raise ValueError(f"coalesce must be 'hilbert' or 'fifo', got {coalesce!r}")
+        if reseed_every is not None and reseed_every < 1:
+            raise ValueError(
+                f"reseed_every must be >= 1, got {reseed_every}"
+            )
         self.k = k
         self.decay = float(decay)
         self.curve = curve
@@ -176,6 +189,8 @@ class StreamKMeans:
         )
         self.core.register_kind("assign", self._handle_assign)
         self.core.register_step(self._lloyd_tick)
+        if reseed_every is not None:
+            self.core.every(reseed_every, self._reseed_empty)
         self._signatures: set = set()
 
     # -- commands -------------------------------------------------------
@@ -322,6 +337,45 @@ class StreamKMeans:
         self._assign = np.asarray(arg)[:N]
         self.core.count("lloyd_dispatch")
 
+    # -- periodic empty-cluster repair (tick core's every(n) trigger) ---
+    def _reseed_empty(self) -> None:
+        """Re-seed clusters that captured no residents from the largest
+        cluster's farthest members (the heaviest cluster donates its
+        outliers — a split repair).  Runs AFTER the tick's Lloyd
+        dispatch, so ``self._assign`` reflects the current centroids.
+        With no empty cluster this returns before touching any state —
+        the whole service stays bit-identical to one without the
+        trigger."""
+        if self._c is None or self._assign is None:
+            return
+        counts = np.bincount(self._assign, minlength=self.k)[: self.k]
+        empty = np.nonzero(counts == 0)[0]
+        if len(empty) == 0:
+            return
+        donor = int(np.argmax(counts))
+        members = np.nonzero(self._assign == donor)[0]
+        # the donor keeps at least one point; extra empties wait for the
+        # next trigger firing
+        n = min(len(empty), max(len(members) - 1, 0))
+        if n == 0:
+            return
+        c = np.array(self._c)
+        d2 = np.sum(
+            (self._x[members] - c[donor][None]) ** 2, axis=1
+        )
+        far = members[np.argsort(-d2, kind="stable")[:n]]
+        c[empty[:n]] = self._x[far]
+        self._c = jnp.asarray(c)
+        if self._S is not None:
+            # the faded mass of a dead cluster must not drag the fresh
+            # seed back on the next decayed step
+            S = np.array(self._S)
+            C = np.array(self._C)
+            S[empty[:n]] = 0.0
+            C[0, empty[:n]] = 0.0
+            self._S, self._C = jnp.asarray(S), jnp.asarray(C)
+        self.core.count("reseeded", float(n))
+
 
 # ---------------------------------------------------------------------------
 # Incremental ε-join
@@ -364,6 +418,17 @@ class StreamSimJoin:
     accumulated pair set stays EXACTLY the batch join's
     (``ops.simjoin_pairs`` on the union — property-tested under
     arbitrary insert/query interleavings).
+
+    ``max_residents=`` bounds the resident index: after each tick's
+    merge, the oldest residents (smallest global ids — ticket order)
+    are evicted until the index fits.  The delete is a SORTED-MERGE
+    DELETE mirroring the insert merge — evicted positions are located
+    in the (key, id)-sorted arrays and removed in place, never a
+    re-sort.  Evicted points stop participating in future probes;
+    already-emitted pairs stay emitted.  For points never evicted the
+    pair set still equals the batch join restricted to them (tested),
+    because eviction is oldest-first: when the later point of a
+    surviving pair arrived, the earlier one was still resident.
     """
 
     def __init__(
@@ -375,6 +440,7 @@ class StreamSimJoin:
         bounds: tuple | None = None,
         bp: int = 128,
         coalesce: str = "hilbert",
+        max_residents: int | None = None,
         interpret: bool | None = None,
         stats_capacity: int = 256,
     ):
@@ -382,7 +448,12 @@ class StreamSimJoin:
             raise ValueError(f"eps must be positive, got {eps}")
         if coalesce not in ("hilbert", "fifo"):
             raise ValueError(f"coalesce must be 'hilbert' or 'fifo', got {coalesce!r}")
+        if max_residents is not None and max_residents < 1:
+            raise ValueError(
+                f"max_residents must be >= 1, got {max_residents}"
+            )
         self.eps = float(eps)
+        self.max_residents = max_residents
         self.bp = bp
         self.dims = dims
         self.nbits0 = nbits
@@ -655,6 +726,25 @@ class StreamSimJoin:
             if self._pts is not None
             else block
         )
+        if (
+            self.max_residents is not None
+            and len(self._ids) > self.max_residents
+        ):
+            self._evict(len(self._ids) - self.max_residents)
+
+    def _evict(self, n: int) -> None:
+        """Drop the ``n`` oldest residents (smallest global ids) from
+        the index — the sorted-merge DELETE mirroring the insert merge:
+        the victims' positions are located in the (key, id)-sorted
+        arrays and removed in place, so the index stays sorted without
+        a re-sort.  History (``_by_id``, ``_pairs``) is untouched;
+        evicted points simply stop being probe candidates."""
+        cutoff = np.partition(self._ids, n - 1)[n - 1]
+        drop = np.nonzero(self._ids <= cutoff)[0]
+        self._keys = np.delete(self._keys, drop)
+        self._ids = np.delete(self._ids, drop)
+        self._pts = np.delete(self._pts, drop, axis=0)
+        self.core.count("evicted", float(len(drop)))
 
     def _handle_query(self, cohort: list) -> None:
         if self._grid is None or self._pts is None:

@@ -235,16 +235,24 @@ class TestProgramTickMetadata:
 
         sched = kmeans_schedule_device("fur", 2, 1)
         prog = kmeans_lloyd_program(
-            sched, pt=2, ct=1, bp=4, bc=4, D=2, k_valid=None, n_valid=None
+            sched, pt=2, ct=1, bp=4, bc=4, D=2, k_valid=None, n_valid=None,
+            choice="fur",
         )
-        name, steps, grid, cols = prog.signature
+        name, steps, grid, cols, choice_key = prog.signature
         assert name == "kmeans_lloyd_fused" and steps == prog.steps
         assert grid == (prog.steps,) and cols == prog.columns
+        assert choice_key == "kmeans|fur|4x4"
         # same-arity schedule swaps in; the rest of the declaration rides
         sched2 = kmeans_schedule_device("hilbert", 2, 1)
         prog2 = prog.with_schedule(sched2)
         assert prog2.kernel is prog.kernel and prog2.name == prog.name
         assert prog2.signature == prog.signature
+        # with choice= the swap updates the recorded choice (and signature)
+        prog3 = prog.with_schedule(
+            sched2, choice=prog.choice.with_(curve="hilbert")
+        )
+        assert prog3.signature[-1] == "kmeans|hilbert|4x4"
+        assert prog3.signature != prog.signature
         # wrong column arity is rejected
         with pytest.raises(ValueError, match="columns"):
             prog.with_schedule(np.zeros((5, 2), dtype=np.int32))

@@ -1,0 +1,401 @@
+"""Curve portfolio + measured schedule autotuner (PR 9's contract).
+
+Four layers, one axis — the traversal order as a first-class tunable:
+
+* registry — the two new d>=3 algebra curves (``harmonious``,
+  ``hcyclic``) are certified against the independent per-cell recursion
+  (codec round-trip, path-vs-decode, gluing), their d=3 locality is no
+  worse than Z-order on the reuse-distance miss curve, and the
+  curve-neighbour halo calculus matches its brute-force oracle;
+* schedule — :class:`ScheduleChoice` keys round-trip and normalise;
+* autotune — the tuning cache round-trips through a tmpdir JSON file
+  with pow2 shape bucketing, ``launch(choice="auto")`` /
+  ``ops(choice="auto")`` are bit-identical to the default when the
+  cache is empty or disabled, and :func:`autotune_app` measures the
+  candidates and records the winner;
+* serving satellites — StreamKMeans empty-cluster re-seeding is a
+  no-op on streams with no empty cluster (differential) and repairs a
+  dead centroid when one appears; StreamSimJoin eviction keeps the
+  index sorted-merged and preserves pair-set equality for unevicted
+  residents.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.core import (
+    ScheduleChoice,
+    as_choice,
+    available_curves,
+    get_curve,
+    tile_schedule_nd,
+)
+from repro.core.curves_nd import TableCurveAlgebra, get_algebra, verify_table_curve
+from repro.core.neighbors import halo_ranges, halo_ranges_oracle
+from repro.core.schedule import miss_curve
+from repro.kernels import autotune, ops
+from repro.kernels.launch import launch
+from repro.serve.apps import StreamKMeans, StreamSimJoin
+
+RNG = np.random.default_rng(19)
+
+NEW_CURVES = ("harmonious", "hcyclic")
+
+
+@pytest.fixture
+def tuning_tmp(tmp_path, monkeypatch):
+    """Point the tuning cache at a tmpdir file and clear both layers."""
+    path = tmp_path / "tuning.json"
+    monkeypatch.setenv(autotune.ENV_VAR, str(path))
+    autotune.tuning_cache_clear()
+    yield path
+    autotune.tuning_cache_clear()
+
+
+@pytest.fixture
+def tuning_disabled(monkeypatch):
+    monkeypatch.setenv(autotune.ENV_VAR, "")
+    autotune.tuning_cache_clear()
+    yield
+    autotune.tuning_cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Registry: the two new algebra curves
+# ---------------------------------------------------------------------------
+
+class TestPortfolioCurves:
+    @pytest.mark.parametrize("name", NEW_CURVES)
+    @pytest.mark.parametrize("d,levels", [(2, 1), (2, 2), (2, 3), (3, 1), (3, 2)])
+    def test_certified_against_per_cell_oracle(self, name, d, levels):
+        alg = get_algebra(name)
+        assert isinstance(alg, TableCurveAlgebra)
+        verify_table_curve(alg, d, levels)
+
+    @pytest.mark.parametrize("name", NEW_CURVES)
+    def test_codec_roundtrip_random(self, name):
+        alg = get_algebra(name)
+        for _ in range(8):
+            d = int(RNG.integers(2, 4))
+            nbits = int(RNG.integers(1, 4 if d == 3 else 5))
+            pts = RNG.integers(0, 1 << nbits, size=(64, d))
+            h = alg.encode(pts, nbits=nbits)
+            back = alg.decode(np.asarray(h), d, nbits=nbits)
+            np.testing.assert_array_equal(back, pts)
+
+    @pytest.mark.parametrize("name", NEW_CURVES)
+    @pytest.mark.parametrize("d,nbits", [(2, 3), (3, 2)])
+    def test_registry_path_matches_decode(self, name, d, nbits):
+        # the SpaceFillingCurve wrapper's pow2 path IS the algebra decode
+        curve = get_curve(name)
+        side = 1 << nbits
+        path = curve.path((side,) * d)
+        alg = get_algebra(name)
+        want = alg.decode(
+            np.arange(side**d, dtype=np.int64), d, nbits=nbits
+        )
+        np.testing.assert_array_equal(path, want)
+
+    @pytest.mark.parametrize("name", NEW_CURVES)
+    def test_non_pow2_path_bijective_unit_step(self, name):
+        # FGF jump-over keeps the generalised path valid off pow2 grids
+        for shape in ((5, 7), (6, 3, 4)):
+            p = np.asarray(get_curve(name).path(shape), dtype=np.int64)
+            assert len(p) == int(np.prod(shape))
+            assert len(set(map(tuple, p.tolist()))) == len(p)
+            for k, s in enumerate(shape):
+                assert p[:, k].min() >= 0 and p[:, k].max() < s
+            assert (np.abs(np.diff(p, axis=0)).sum(axis=1) >= 1).all()
+
+    @pytest.mark.parametrize("name", NEW_CURVES)
+    def test_in_available_curves(self, name):
+        assert name in available_curves(2)
+        assert name in available_curves(3)
+
+    @pytest.mark.parametrize("name", NEW_CURVES)
+    def test_d3_locality_no_worse_than_zorder(self, name):
+        # reuse-distance miss curve over the three operand-pair
+        # projections of an 8^3 tile schedule (the Fig. 1 model at d=3)
+        def misses(curve, size):
+            s = np.asarray(tile_schedule_nd(curve, (8, 8, 8)))
+            return sum(
+                miss_curve(s[:, cols], [size])[size]
+                for cols in ((0, 2), (2, 1), (0, 1))
+            )
+
+        for size in (8, 16, 32):
+            assert misses(name, size) <= misses("zorder", size)
+
+    @pytest.mark.parametrize("name", NEW_CURVES)
+    @pytest.mark.parametrize("d,nbits", [(2, 3), (3, 1), (3, 2)])
+    def test_halo_ranges_match_oracle(self, name, d, nbits):
+        total = 1 << (d * nbits)
+        cases = [
+            (0, total // 4, 1.0),
+            (total // 3, total // 2, 1.5),
+            (5, min(12, total), 0.9),
+        ]
+        for lo, hi, radius in cases:
+            if lo >= hi:
+                continue
+            got = halo_ranges(
+                lo, hi, ndim=d, nbits=nbits, radius=radius, curve=name
+            )
+            want = halo_ranges_oracle(
+                lo, hi, ndim=d, nbits=nbits, radius=radius, curve=name
+            )
+            np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# ScheduleChoice
+# ---------------------------------------------------------------------------
+
+class TestScheduleChoice:
+    def test_key_roundtrip(self):
+        for c in (
+            ScheduleChoice(),
+            ScheduleChoice(curve="hcyclic", block=(32,), kind="phased:fw"),
+            ScheduleChoice(curve="fur", block=(64, 8), kind="kmeans"),
+        ):
+            assert ScheduleChoice.from_key(c.key()) == c
+
+    def test_blockless_key(self):
+        assert ScheduleChoice(kind="triangle").key() == "triangle|hilbert|-"
+
+    def test_with_(self):
+        c = ScheduleChoice(kind="tile", curve="hilbert", block=(16, 16))
+        assert c.with_(curve="harmonious").curve == "harmonious"
+        assert c.with_(curve="harmonious").block == (16, 16)
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="kind"):
+            ScheduleChoice(kind="diagonal")
+        with pytest.raises(ValueError, match="kind"):
+            as_choice(ScheduleChoice(kind="tile"), kind="kmeans")
+
+    def test_as_choice_normalises_str(self):
+        c = as_choice("harmonious", kind="phased:fw")
+        assert c == ScheduleChoice(curve="harmonious", kind="phased:fw")
+        assert as_choice(None, kind="tile") == ScheduleChoice(kind="tile")
+
+
+# ---------------------------------------------------------------------------
+# Tuning cache + auto dispatch
+# ---------------------------------------------------------------------------
+
+class TestTuningCache:
+    def test_record_lookup_roundtrip_through_file(self, tuning_tmp):
+        choice = ScheduleChoice(curve="hcyclic", kind="phased:fw")
+        autotune.record(
+            "floyd_warshall", ((40, 40),), choice, 1.5, default_ms=2.0,
+            backend="cpu",
+        )
+        assert tuning_tmp.exists()
+        data = json.loads(tuning_tmp.read_text())
+        assert data["version"] == 1
+        # pow2 bucketing: (40, 40) and (48, 48) share the 64x64 bucket
+        got40 = autotune.lookup("floyd_warshall", ((40, 40),), backend="cpu")
+        got48 = autotune.lookup("floyd_warshall", ((48, 48),), backend="cpu")
+        assert got40 == got48 == choice
+        # a fresh in-memory layer re-reads the persisted file
+        autotune.tuning_cache_clear()
+        assert (
+            autotune.lookup("floyd_warshall", ((40, 40),), backend="cpu")
+            == choice
+        )
+
+    def test_disabled_cache_is_session_local(self, tuning_disabled):
+        # a disabling env value turns persistence off: records live only
+        # in the in-process layer and vanish with it — nothing survives
+        # to the next session, so fresh processes stay on the default
+        choice = ScheduleChoice(curve="fur", kind="phased:fw")
+        autotune.record("floyd_warshall", ((32, 32),), choice, 1.0)
+        assert autotune.cache_path() is None
+        assert autotune.lookup("floyd_warshall", ((32, 32),)) == choice
+        autotune.tuning_cache_clear()  # "new session"
+        assert autotune.lookup("floyd_warshall", ((32, 32),)) is None
+
+    def test_shape_bucket(self):
+        assert autotune.shape_bucket(((40, 40),)) == "64x64"
+        assert autotune.shape_bucket(((200, 3), (8, 3))) == "256x4+8x4"
+
+
+class TestAutoDispatch:
+    def _x(self, n=32):
+        rng = np.random.default_rng(5)
+        x = rng.uniform(0.1, 1.0, size=(n, n)).astype(np.float32)
+        np.fill_diagonal(x, 0.0)
+        return jnp.asarray(x)
+
+    def test_ops_auto_bit_identical_when_cache_empty(self, tuning_disabled):
+        x = self._x()
+        base = ops.floyd_warshall(x, b=8, interpret=True)
+        auto = ops.floyd_warshall(x, b=8, choice="auto", interpret=True)
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(auto))
+
+    def test_ops_auto_consults_recorded_winner(self, tuning_tmp):
+        x = self._x()
+        base = ops.floyd_warshall(x, b=8, interpret=True)
+        choice = ScheduleChoice(curve="hcyclic", kind="phased:fw")
+        autotune.record("floyd_warshall", ((32, 32),), choice, 1.0)
+        auto = ops.floyd_warshall(x, b=8, choice="auto", interpret=True)
+        expl = ops.floyd_warshall(x, b=8, choice=choice, interpret=True)
+        # FW is min-plus: associative-exact, so the swap is bit-identical
+        np.testing.assert_array_equal(np.asarray(auto), np.asarray(expl))
+        np.testing.assert_array_equal(np.asarray(auto), np.asarray(base))
+
+    def test_launch_auto_and_explicit_choice(self, tuning_disabled):
+        from repro.kernels.floyd_warshall import fw_program
+
+        x = self._x()
+        prog = fw_program("hilbert", 4, 8)
+        base = launch(prog, x, interpret=True)
+        auto = launch(prog, x, choice="auto", interpret=True)
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(auto))
+        swapped = launch(
+            prog, x,
+            choice=ScheduleChoice(curve="harmonious", kind="phased:fw"),
+            interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(swapped))
+
+    def test_apply_choice_rejects_kind_mismatch(self):
+        from repro.kernels.floyd_warshall import fw_program
+
+        prog = fw_program("hilbert", 4, 8)
+        with pytest.raises(ValueError, match="kind"):
+            autotune.apply_choice(
+                prog, ScheduleChoice(curve="hilbert", kind="kmeans")
+            )
+
+    def test_ops_rejects_bare_string_choice(self):
+        with pytest.raises(ValueError, match="curve"):
+            ops.floyd_warshall(self._x(8), b=8, choice="hilbert",
+                               interpret=True)
+
+    def test_autotune_app_measures_and_records(self, tuning_tmp):
+        x = self._x()
+        out = autotune.autotune_app(
+            "floyd_warshall", x,
+            curves=("hilbert", "hcyclic"), repeats=1, b=8, interpret=True,
+        )
+        assert out["rows"][0]["default"]
+        assert sum(r["chosen"] for r in out["rows"]) == 1
+        assert out["default_ms"] > 0
+        winner = ScheduleChoice.from_key(out["winner"])
+        assert autotune.lookup("floyd_warshall", ((32, 32),)) == winner
+
+
+# ---------------------------------------------------------------------------
+# Serving satellites: re-seeding + eviction
+# ---------------------------------------------------------------------------
+
+class TestStreamKMeansReseed:
+    def test_noop_differential_vs_plain_service(self):
+        # no empty cluster ever appears: the armed trigger must leave
+        # every observable bit-identical to the un-armed service
+        pts = np.random.default_rng(21).uniform(0, 1, (120, 2)).astype(
+            np.float32
+        )
+        armed = StreamKMeans(3, reseed_every=1, interpret=True)
+        plain = StreamKMeans(3, interpret=True)
+        for svc in (armed, plain):
+            svc.insert(pts)
+            for _ in range(4):
+                svc.tick()
+        assert armed.stats.total("reseeded") == 0
+        np.testing.assert_array_equal(armed.centroids(), plain.centroids())
+        np.testing.assert_array_equal(armed.assignment(), plain.assignment())
+
+    def test_repairs_dead_centroid(self):
+        rng = np.random.default_rng(22)
+        pts = np.concatenate(
+            [rng.normal(0.2, 0.02, (40, 2)), rng.normal(0.8, 0.02, (20, 2))]
+        ).astype(np.float32)
+        svc = StreamKMeans(3, reseed_every=1, interpret=True)
+        svc.insert(pts)
+        svc.tick()
+        # kill one centroid: park it far outside the data range so the
+        # next Lloyd tick assigns nobody to it
+        c = np.array(svc._c)
+        c[2] = 50.0
+        svc._c = jnp.asarray(c)
+        svc.tick()  # Lloyd sees the dead centroid; trigger repairs it
+        assert svc.stats.total("reseeded") >= 1
+        assert float(np.asarray(svc._c)[2].max()) < 2.0  # back in range
+        svc.tick()
+        counts = np.bincount(svc.assignment(), minlength=3)[:3]
+        assert (counts > 0).all()
+
+    def test_constructor_validation(self):
+        with pytest.raises(ValueError, match="reseed_every"):
+            StreamKMeans(3, reseed_every=0)
+
+
+class TestStreamSimJoinEviction:
+    EPS = 0.12
+
+    def test_bound_respected_and_index_sorted(self):
+        rng = np.random.default_rng(23)
+        svc = StreamSimJoin(
+            self.EPS, bp=16, bounds=(np.zeros(2), np.ones(2)),
+            max_residents=30, interpret=True,
+        )
+        for _ in range(5):
+            svc.insert(rng.uniform(0, 1, (12, 2)).astype(np.float32))
+            svc.tick()
+        assert svc.resident_count == 30
+        assert svc.stats.total("evicted") == 30
+        # sorted-merge delete left the (key, id) order intact
+        assert (np.diff(svc._keys) >= 0).all()
+        eq = np.diff(svc._keys) == 0
+        assert (np.diff(svc._ids)[eq] > 0).all()
+        # survivors are the newest ids (oldest-ticket-first eviction)
+        np.testing.assert_array_equal(
+            np.sort(svc._ids), np.arange(30, 60, dtype=np.int64)
+        )
+
+    def test_pair_set_equality_for_unevicted(self):
+        rng = np.random.default_rng(24)
+        svc = StreamSimJoin(
+            self.EPS, bp=16, bounds=(np.zeros(2), np.ones(2)),
+            max_residents=25, interpret=True,
+        )
+        for _ in range(6):
+            svc.insert(rng.uniform(0, 1, (10, 2)).astype(np.float32))
+            svc.tick()
+        union = svc.points_by_id()
+        want = np.asarray(
+            ops.simjoin_pairs(jnp.asarray(union), self.EPS, interpret=True),
+            dtype=np.int64,
+        )
+        survivors = set(int(i) for i in svc._ids)
+        want_s = sorted(
+            (int(a), int(b)) for a, b in want
+            if a in survivors and b in survivors
+        )
+        got_s = sorted(
+            (int(a), int(b)) for a, b in svc.pairs()
+            if a in survivors and b in survivors
+        )
+        assert got_s == want_s
+
+    def test_no_bound_keeps_everything(self):
+        svc = StreamSimJoin(
+            self.EPS, bp=16, bounds=(np.zeros(2), np.ones(2)),
+            interpret=True,
+        )
+        svc.insert(np.random.default_rng(25).uniform(0, 1, (40, 2))
+                   .astype(np.float32))
+        svc.tick()
+        assert svc.resident_count == 40
+
+    def test_constructor_validation(self):
+        with pytest.raises(ValueError, match="max_residents"):
+            StreamSimJoin(0.1, max_residents=0)
