@@ -19,10 +19,13 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core import ScheduleChoice
 from repro.kernels import autotune
 
 N_FW, B_FW = 128, 32
 N_KM, K, BP, BC = 512, 16, 128, 16
+N_MM = 128
+MM_BLOCKS = ((32, 32, 32), (64, 64, 64))
 CURVES = ("hilbert", "fur", "harmonious", "hcyclic")
 
 
@@ -38,24 +41,50 @@ def _km_operand(n=N_KM, d=3, seed=1):
     return jnp.asarray(rng.uniform(0, 1, size=(n, d)).astype(np.float32))
 
 
+def _mm_operands(n=N_MM, seed=2):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+def _variant(choice_key: str) -> str:
+    """Row-name token for a measured candidate: ``curve`` for a
+    default-block choice, ``curve-b64x64x64`` for a block variant.
+    Dashes (never underscores) inside the token keep the CI gate's
+    ``name.rsplit('_', 3)[0]`` == app parse working."""
+    ch = ScheduleChoice.from_key(choice_key)
+    if ch.block is None:
+        return ch.curve
+    return f"{ch.curve}-b" + "x".join(str(b) for b in ch.block)
+
+
 def run() -> list[dict]:
     rows: list[dict] = []
+    mm_a, mm_b = _mm_operands()
     jobs = [
-        ("floyd_warshall", (_fw_operand(),), {"b": B_FW}),
-        ("kmeans_lloyd", (_km_operand(), K), {"iters": 2, "bp": BP, "bc": BC}),
+        ("floyd_warshall", (_fw_operand(),), {"b": B_FW}, None),
+        ("kmeans_lloyd", (_km_operand(), K),
+         {"iters": 2, "bp": BP, "bc": BC}, None),
+        ("matmul", (mm_a, mm_b), {}, MM_BLOCKS),
     ]
-    for app, args, kw in jobs:
+    for app, args, kw, blocks in jobs:
+        cands = (
+            autotune.candidate_choices(app, curves=CURVES, blocks=blocks)
+            if blocks else None
+        )
         out = autotune.autotune_app(
-            app, *args, curves=CURVES, repeats=2, max_measure=4, **kw
+            app, *args, curves=CURVES, candidates=cands, repeats=2,
+            max_measure=4 if blocks is None else 5, **kw
         )
         for r in out["rows"]:
             rows.append({
                 "bench": "autotune",
-                "name": f"{app}_{r['choice'].split('|')[1]}_warm_ms",
+                "name": f"{app}_{_variant(r['choice'])}_warm_ms",
                 "value": round(r["warm_ms"], 3),
                 "derived": (
                     f"choice={r['choice']};chosen={r['chosen']};"
-                    f"default={r['default']}"
+                    f"default={r['default']};block_swept={blocks is not None}"
                 ),
             })
         best_ms = min(r["warm_ms"] for r in out["rows"])

@@ -241,16 +241,37 @@ def _decode_page_schedule_cached(
     return decode_page_schedule(num_slots, max_pages, slot_order)
 
 
+@register_schedule_cache
+@functools.lru_cache(maxsize=64)
+def _decode_page_schedule_dev(
+    num_slots: int,
+    max_pages: int,
+    slot_order: tuple[int, ...] | None,
+    backend: str,
+) -> jax.Array:
+    # materialise eagerly so the cached value is a concrete device
+    # array, not a leaked tracer — a first call from inside a jit/scan
+    # trace would otherwise pin the tracer for every later caller
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(
+            _decode_page_schedule_cached(num_slots, max_pages, slot_order),
+            dtype=jnp.int32,
+        )
+
+
 def decode_page_schedule_device(
     num_slots: int, max_pages: int, slot_order: tuple[int, ...] | None = None
 ) -> jax.Array:
-    """LRU-cached :func:`decode_page_schedule` as a device array.  Only
-    the host table is cached — the upload happens per call so a first
-    call inside a jit/scan trace never pins a tracer in the cache (the
-    decode step is always jitted, where the table constant-folds)."""
-    return jnp.asarray(
-        _decode_page_schedule_cached(num_slots, max_pages, slot_order),
-        dtype=jnp.int32,
+    """:func:`decode_page_schedule` as a *device* array, LRU-cached per
+    (num_slots, max_pages, slot_order, backend) — the schedule is
+    static over every ragged fill state, so re-uploading the host table
+    each decode tick was a pure per-tick tax.
+    ``jax.ensure_compile_time_eval`` makes the cached value concrete
+    even when the first call happens under a jit trace."""
+    if slot_order is not None:
+        slot_order = tuple(int(s) for s in slot_order)
+    return _decode_page_schedule_dev(
+        num_slots, max_pages, slot_order, jax.default_backend()
     )
 
 
@@ -385,6 +406,246 @@ def flash_attention_decode(
         schedule,
         jnp.asarray(page_table, dtype=jnp.int32),
         jnp.asarray(pos, dtype=jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+    )
+
+
+# ---------------------------------------------------------------------------
+# paged prefill (PR 10): batched causal attention over whole prompts
+# ---------------------------------------------------------------------------
+
+def prefill_page_schedule(
+    pos0,
+    n_new,
+    page_size: int,
+    max_pages: int,
+    bq: int | None = None,
+) -> np.ndarray:
+    """Schedule for the paged prefill kernel: int32[steps, 6] rows of
+    (slot, q_tile, logical_page, first, last, valid).
+
+    Unlike the decode schedule this one IS ragged-shaped: each slot
+    contributes ``ceil(n_new/bq)`` q tiles, and q tile ``t`` visits
+    logical pages ``0..(last position in the tile) // page_size`` — the
+    causal triangle at page granularity, so total work is O(prompt)
+    pages per slot instead of the O(prompt²) masked-decode walk.  Slots
+    with ``n_new == 0`` (inactive lanes riding along in the batch)
+    contribute nothing.  Steps are padded to the next power of two with
+    ``valid=0`` rows the kernel skips, so same-bucket cohorts share one
+    compiled program (the schedule itself is a dynamic scalar-prefetch
+    operand).
+    """
+    bq = page_size if bq is None else bq
+    rows = []
+    for slot, (p0, nn) in enumerate(zip(pos0, n_new)):
+        p0, nn = int(p0), int(nn)
+        if nn <= 0:
+            continue
+        n_qt = -(-nn // bq)
+        for qt in range(n_qt):
+            q_hi = p0 + min((qt + 1) * bq, nn) - 1  # last live q position
+            lp_hi = min(q_hi // page_size, max_pages - 1)
+            for lp in range(lp_hi + 1):
+                rows.append(
+                    (slot, qt, lp, 1 if lp == 0 else 0,
+                     1 if lp == lp_hi else 0, 1)
+                )
+    if not rows:
+        rows = [(0, 0, 0, 0, 0, 0)]
+    out = np.asarray(rows, dtype=np.int32)
+    steps = out.shape[0]
+    bucket = 1 << max(steps - 1, 0).bit_length()
+    if bucket != steps:
+        out = np.concatenate(
+            [out, np.zeros((bucket - steps, 6), dtype=np.int32)], axis=0
+        )
+    return out
+
+
+@register_schedule_cache
+@functools.lru_cache(maxsize=128)
+def _prefill_page_schedule_dev(
+    pos0: tuple, n_new: tuple, page_size: int, max_pages: int, bq: int,
+    backend: str,
+) -> jax.Array:
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(
+            prefill_page_schedule(pos0, n_new, page_size, max_pages, bq),
+            dtype=jnp.int32,
+        )
+
+
+def prefill_page_schedule_device(
+    pos0, n_new, page_size: int, max_pages: int, bq: int | None = None
+) -> jax.Array:
+    """:func:`prefill_page_schedule` as a device array (LRU per cohort
+    shape + backend, concrete even under a trace)."""
+    bq = page_size if bq is None else bq
+    return _prefill_page_schedule_dev(
+        tuple(int(p) for p in pos0),
+        tuple(int(n) for n in n_new),
+        page_size,
+        max_pages,
+        bq,
+        jax.default_backend(),
+    )
+
+
+def _flash_prefill_kernel(
+    sched_ref,
+    pt_ref,
+    pos_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    sm_scale: float,
+    page_size: int,
+    bq: int,
+    g: int,
+):
+    s = pl.program_id(1)
+    slot = sched_ref[s, 0]
+    qt = sched_ref[s, 1]
+    lp = sched_ref[s, 2]
+    first = sched_ref[s, 3]
+    last = sched_ref[s, 4]
+    valid = sched_ref[s, 5]
+
+    @pl.when((first == 1) & (valid == 1))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(valid == 1)
+    def _step():
+        # (bq, g, Dk) -> (bq*g, Dk): row r is query token r // g, head
+        # r % g — a plain 2-D matmul the MXU can take directly
+        q = q_ref[0, :, 0].astype(jnp.float32).reshape(bq * g, -1)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (ps, Dk)
+        v = v_ref[0, :, 0].astype(jnp.float32)  # (ps, Dv)
+
+        scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+
+        # causal + ragged mask in one comparison: query token i of tile
+        # qt sits at absolute position pos0[slot] + qt*bq + i and may
+        # see kv positions <= its own (the whole cohort's new K/V is
+        # scattered before this kernel runs, so self-attention is
+        # write-before-attend like the decode path).  Padded q rows
+        # (i >= n_new) sit at future positions; their output is garbage
+        # the caller discards, but stays finite (mask value is finite).
+        tok = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0) // g
+        q_pos = pos_ref[slot] + qt * bq + tok
+        kv_pos = lp * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, scores.shape, 1
+        )
+        scores = jnp.where(kv_pos <= q_pos, scores, DEFAULT_MASK_VALUE)
+
+        m_prev = m_ref[:, 0:1]  # (bq*g, 1)
+        m_cur = jnp.max(scores, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(scores - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_ref[:, 0:1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when((last == 1) & (valid == 1))
+    def _flush():
+        out = acc_ref[...] / l_ref[:, 0:1]
+        o_ref[0, :, 0] = out.reshape(bq, g, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def flash_attention_prefill(
+    schedule: jax.Array,
+    page_table: jax.Array,
+    pos0: jax.Array,
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    *,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched causal prefill attention against a PAGED KV cache.
+
+    q: (B, Tq, Hkv, g, Dk) — each slot's Tq new prompt tokens in
+    grouped GQA layout (token i lives at absolute position
+    ``pos0[slot] + i``; rows at i >= the slot's new-token count are
+    padding whose output is undefined-but-finite).  Tq must be a
+    multiple of the page size (q tiles align to kv pages).
+    k_pages/v_pages: physical pools with the cohort's new K/V already
+    scattered through the page table (split-phase: XLA scatter first,
+    then this kernel gathers — no write-then-read hazard inside the
+    pipeline).  schedule: :func:`prefill_page_schedule`, a dynamic
+    scalar-prefetch operand.  Returns (B, Tq, Hkv, g, Dv).
+    """
+    B, Tq, Hkv, g, Dk = q.shape
+    P, ps, Hkv_k, Dk_k = k_pages.shape
+    Dv = v_pages.shape[-1]
+    assert (Hkv_k, Dk_k) == (Hkv, Dk), (k_pages.shape, q.shape)
+    assert Tq % ps == 0, (Tq, ps)
+    bq = ps
+    if sm_scale is None:
+        sm_scale = 1.0 / float(np.sqrt(Dk))
+    steps = schedule.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(Hkv, steps),
+        in_specs=[
+            pl.BlockSpec(
+                (1, bq, 1, g, Dk),
+                lambda h, s, sr, pt, pv: (sr[s, 0], sr[s, 1], h, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, ps, 1, Dk),
+                lambda h, s, sr, pt, pv: (pt[sr[s, 0], sr[s, 2]], 0, h, 0),
+            ),
+            pl.BlockSpec(
+                (1, ps, 1, Dv),
+                lambda h, s, sr, pt, pv: (pt[sr[s, 0], sr[s, 2]], 0, h, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bq, 1, g, Dv),
+            lambda h, s, sr, pt, pv: (sr[s, 0], sr[s, 1], h, 0, 0),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bq * g, Dv), jnp.float32),
+            pltpu.VMEM((bq * g, 128), jnp.float32),
+            pltpu.VMEM((bq * g, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _flash_prefill_kernel,
+            sm_scale=sm_scale,
+            page_size=ps,
+            bq=bq,
+            g=g,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Tq, Hkv, g, Dv), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        schedule,
+        jnp.asarray(page_table, dtype=jnp.int32),
+        jnp.asarray(pos0, dtype=jnp.int32),
         q,
         k_pages,
         v_pages,

@@ -314,15 +314,17 @@ def candidate_choices(
     # the app's true default ALWAYS measures first — rows[0] is the
     # baseline that default_ms and the tuned_speedup gate are named
     # after, even when the caller passes an explicit curve portfolio
+    # or a block sweep (block=None rides on the kernel's own default
+    # tile, so it stays the baseline row)
     curves = [default] + [c for c in curves if c != default]
-    out = []
+    out = [ScheduleChoice(curve=default, kind=kind)]
     for cv in curves:
         if blocks:
             out.extend(
                 ScheduleChoice(curve=cv, block=tuple(b), kind=kind)
                 for b in blocks
             )
-        else:
+        elif cv != default:
             out.append(ScheduleChoice(curve=cv, kind=kind))
     return out
 

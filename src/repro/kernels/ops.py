@@ -41,8 +41,10 @@ from .attention import (
     causal_schedule,
     decode_page_schedule_device,
     flash_attention_decode,
+    flash_attention_prefill,
     flash_attention_swizzled,
     full_schedule,
+    prefill_page_schedule_device,
 )
 from .cholesky import cholesky_blocked, cholesky_blocked_reference, cholesky_program
 from .floyd_warshall import (
@@ -338,6 +340,49 @@ def attention_decode(
     )
     return flash_attention_decode(
         sched, page_table, pos, q, k_pages, v_pages,
+        sm_scale=sm_scale, interpret=_interpret(interpret),
+    )
+
+
+def attention_prefill(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    pos0,
+    n_new=None,
+    *,
+    sm_scale: float | None = None,
+    schedule: jax.Array | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched causal prefill against a PAGED KV cache: one dispatch
+    attends a whole cohort of prompts through the page table.
+
+    q: (B, Tq, Hkv, g, Dk) — Tq new prompt tokens per slot (token i at
+    absolute position ``pos0[slot] + i``; rows past the slot's
+    new-token count are padding with undefined-but-finite output).
+    ``pos0`` / ``n_new`` are the cohort's host-side admission metadata
+    (per-slot resume position and new-token count) from which the
+    ragged page schedule is built; pass ``schedule=`` instead when
+    calling from inside a trace (the engine builds it once per
+    admission via :func:`prefill_page_schedule_device`).  The new K/V
+    must already be scattered into the pools (split-phase; the models
+    layer does the masked scatter first).  Returns (B, Tq, Hkv, g, Dv).
+    """
+    ps = k_pages.shape[1]
+    max_pages = page_table.shape[1]
+    if schedule is None:
+        if n_new is None:
+            raise ValueError("attention_prefill needs n_new or schedule=")
+        schedule = prefill_page_schedule_device(
+            tuple(int(p) for p in pos0),
+            tuple(int(n) for n in n_new),
+            ps,
+            max_pages,
+        )
+    return flash_attention_prefill(
+        schedule, page_table, pos0, q, k_pages, v_pages,
         sm_scale=sm_scale, interpret=_interpret(interpret),
     )
 
@@ -728,6 +773,7 @@ __all__ = [
     "matmul",
     "attention",
     "attention_decode",
+    "attention_prefill",
     "kmeans_assign",
     "kmeans_lloyd",
     "simjoin_counts",

@@ -33,6 +33,14 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--page-layout", choices=("hilbert", "naive"), default="hilbert")
     ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--prefill", choices=("chunked", "compiled"),
+                    default="chunked",
+                    help="admission prefill: chunked masked decode steps, or "
+                    "one compiled-forward batched dispatch per cohort "
+                    "(requires --paged)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="copy-on-write Hilbert-page prefix sharing across "
+                    "requests (requires --paged)")
     ap.add_argument("--hilbert-admission", action="store_true",
                     help="order each admitted cohort by Hilbert token rank")
     args = ap.parse_args()
@@ -47,13 +55,19 @@ def main() -> None:
                          paged=args.paged, attn_impl=args.attn,
                          page_size=args.page_size, page_layout=args.page_layout,
                          prefill_chunk=args.prefill_chunk,
+                         prefill=args.prefill,
+                         prefix_sharing=args.prefix_sharing,
                          hilbert_admission=args.hilbert_admission)
 
     rng = np.random.default_rng(0)
+    # a shared system-prompt prefix so --prefix-sharing has pages to hit
+    shared = rng.integers(0, cfg.vocab_size, size=args.page_size + 4).tolist()
     reqs = []
     for _ in range(args.requests):
         plen = int(rng.integers(1, 8))
         prompt = rng.integers(0, cfg.vocab_size, size=plen).tolist()
+        if args.prefix_sharing:
+            prompt = shared + prompt
         reqs.append(engine.submit(prompt, max_new=args.max_new))
 
     t0 = time.perf_counter()
@@ -62,6 +76,10 @@ def main() -> None:
     toks = sum(len(r.out) for r in reqs)
     print(f"{args.arch}: served {len(reqs)} requests, {toks} tokens "
           f"in {dt:.1f}s ({toks/dt:.1f} tok/s, {args.slots} slots)")
+    if args.paged:
+        kv = engine.kv_pages
+        print(f"  pages: allocated={kv.stat_allocated} "
+              f"shared={kv.stat_shared} cow={kv.stat_cow}")
     for r in reqs[:3]:
         print(f"  req{r.rid}: {r.prompt} -> {r.out}")
 

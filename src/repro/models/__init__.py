@@ -13,6 +13,7 @@ from .model import (
     loss_fn,
     param_count_analytic,
     param_specs,
+    prefill_paged,
 )
 
 __all__ = [
@@ -30,4 +31,5 @@ __all__ = [
     "loss_fn",
     "param_count_analytic",
     "param_specs",
+    "prefill_paged",
 ]

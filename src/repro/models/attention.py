@@ -293,6 +293,44 @@ def _paged_write(pages, new, page_table, pos, write_mask):
     return pages.at[phys, pos % ps].set(new.astype(pages.dtype))
 
 
+def _paged_write_many(pages, new, page_table, pos0, write_mask):
+    """Scatter T tokens per slot into the physical pool (the prefill
+    twin of :func:`_paged_write`).
+
+    pages: (P, ps, Hkv, D); new: (B, T, Hkv, D) with token i of slot b
+    at absolute position ``pos0[b] + i``; write_mask: bool (B, T) —
+    padded / inactive lanes are diverted to the trash page (their
+    logical page index is also clamped so out-of-range pad positions
+    never index past the table)."""
+    ps = pages.shape[1]
+    MP = page_table.shape[1]
+    B, T = new.shape[:2]
+    positions = pos0[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    lp = jnp.minimum(positions // ps, MP - 1)
+    phys = page_table[jnp.arange(B, dtype=jnp.int32)[:, None], lp]
+    phys = jnp.where(write_mask, phys, 0)
+    return pages.at[phys, positions % ps].set(new.astype(pages.dtype))
+
+
+def _sdpa_prefix(q, k, v, mask):
+    """Paged-prefill attention reference: q (B,T,H,Dh) over gathered
+    pools k/v (B,S,Hkv,Dh) with a full (B,T,S) boolean mask (causal by
+    absolute position — each query row's reduction is element-for-
+    element the same as the chunked decode path's single-row
+    ``_sdpa``)."""
+    B, T, H, Dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, T, Hkv, g, Dh)
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / np.sqrt(Dh)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, T, H, Dh).astype(q.dtype)
+
+
 def gqa_init_pages(cfg: ModelConfig, num_pages: int, page_size: int, dtype):
     hkv, dh = cfg.num_kv_heads, cfg.attn_head_dim
     return {
@@ -337,6 +375,56 @@ def gqa_decode_paged(params, x, cfg: ModelConfig, pools, pos, page_table, *,
         valid = jnp.arange(MP * ps, dtype=jnp.int32)[None] <= pos[:, None]
         out = _sdpa(q, k_all, v_all, causal=False, kv_len_mask=valid)
         out = out.reshape(B, 1, -1)
+    return out @ params["wo"], pools
+
+
+def gqa_prefill_paged(params, x, cfg: ModelConfig, pools, pos0, n_new,
+                      page_table, *, attn_impl: str = "flash", schedule=None):
+    """Batched multi-token GQA prefill against a paged cache.
+
+    x: (B, T, d) — T new prompt tokens per slot (token i at absolute
+    position ``pos0[b] + i``; rows at i >= n_new[b] are padding).
+    Split-phase: the cohort's K/V is scattered through the page table
+    first (masked — pad and inactive lanes hit the trash page), then
+    every new token attends causally over its slot's whole prefix in
+    one dispatch.  ``schedule`` is the prefill page schedule (required
+    for attn_impl="flash" under a trace).  Returns (out, pools)."""
+    B, T, _ = x.shape
+    q, k, v = _qkv(params, x, cfg)
+    positions = pos0[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    wm = jnp.arange(T, dtype=jnp.int32)[None] < n_new[:, None]
+    pools = {
+        "k_pages": _paged_write_many(pools["k_pages"], k, page_table, pos0, wm),
+        "v_pages": _paged_write_many(pools["v_pages"], v, page_table, pos0, wm),
+    }
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.attn_head_dim
+    if attn_impl == "flash":
+        from repro.kernels import ops as kops
+
+        qg = q.reshape(B, T, Hkv, H // Hkv, Dh)
+        out = kops.attention_prefill(
+            qg, pools["k_pages"], pools["v_pages"], page_table, pos0,
+            sm_scale=1.0 / np.sqrt(Dh), schedule=schedule,
+        )
+        out = out.reshape(B, T, H * Dh).astype(x.dtype)
+    else:
+        ps = pools["k_pages"].shape[1]
+        MP = page_table.shape[1]
+        k_all = pools["k_pages"][page_table].reshape(B, MP * ps, Hkv, Dh)
+        v_all = pools["v_pages"][page_table].reshape(B, MP * ps, Hkv, Dh)
+        mask = (
+            jnp.arange(MP * ps, dtype=jnp.int32)[None, None]
+            <= positions[:, :, None]
+        )
+        out = _sdpa_prefix(q, k_all, v_all, mask)
+        out = out.reshape(B, T, -1)
+    # Zero padding rows: q tiles past a slot's last schedule row are
+    # never written by the flash kernel (uninitialised -> NaN), and a
+    # NaN pad activation would reach the trash page, from where flash
+    # decode's online softmax leaks it back through 0 * NaN.
+    out = jnp.where(wm[:, :, None], out, 0.0)
     return out @ params["wo"], pools
 
 
@@ -581,3 +669,66 @@ def mla_decode_paged(params, x, cfg: ModelConfig, pools, pos, page_table, *,
         ctx = jnp.einsum("bhqk,bkr->bqhr", p, c_all.astype(jnp.float32))
         out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_v.astype(jnp.float32)).astype(x.dtype)
     return out.reshape(B, 1, -1) @ params["wo"], pools
+
+
+def mla_prefill_paged(params, x, cfg: ModelConfig, pools, pos0, n_new,
+                      page_table, *, attn_impl: str = "flash", schedule=None):
+    """Batched multi-token absorbed-weight MLA prefill against the
+    paged compressed cache (the prefill twin of
+    :func:`mla_decode_paged`: Hkv=1, g=num_heads, the latent pool
+    passed as both k and v, context sliced back to kv_lora_rank).
+    Returns (out, pools)."""
+    B, T, _ = x.shape
+    h = cfg.num_heads
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    positions = pos0[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)  # (B,T,h,*)
+    c_kv_new, k_rope_new = _mla_ckv(params, x, cfg, positions)
+    new = jnp.concatenate([c_kv_new, k_rope_new], axis=-1)[:, :, None, :]
+    wm = jnp.arange(T, dtype=jnp.int32)[None] < n_new[:, None]
+    pools = {
+        "kv_pages": _paged_write_many(
+            pools["kv_pages"], new, page_table, pos0, wm
+        )
+    }
+    wkv_b = params["wkv_b"].reshape(r, h, cfg.qk_nope_head_dim + cfg.v_head_dim)
+    w_nope = wkv_b[:, :, : cfg.qk_nope_head_dim]
+    w_v = wkv_b[:, :, cfg.qk_nope_head_dim :]
+    q_lat = jnp.einsum(
+        "bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_nope.astype(jnp.float32)
+    )
+    scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    if attn_impl == "flash":
+        from repro.kernels import ops as kops
+
+        q_full = jnp.concatenate([q_lat, q_rope.astype(jnp.float32)], axis=-1)
+        qg = q_full[:, :, None]  # (B, T, Hkv=1, g=h, r+dr)
+        ctx = kops.attention_prefill(
+            qg, pools["kv_pages"], pools["kv_pages"], page_table, pos0,
+            sm_scale=float(scale), schedule=schedule,
+        )
+        ctx = ctx[:, :, 0, :, :r]  # (B, T, h, r): drop the k_rope columns
+        out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_v.astype(jnp.float32))
+        out = out.astype(x.dtype)
+    else:
+        ps = pools["kv_pages"].shape[1]
+        MP = page_table.shape[1]
+        kv_all = pools["kv_pages"][page_table].reshape(B, MP * ps, r + dr)
+        c_all, kr_all = kv_all[..., :r], kv_all[..., r:]
+        scores = (
+            jnp.einsum("bqhr,bkr->bhqk", q_lat, c_all.astype(jnp.float32))
+            + jnp.einsum(
+                "bqhd,bkd->bhqk", q_rope.astype(jnp.float32), kr_all.astype(jnp.float32)
+            )
+        ) * scale
+        mask = (
+            jnp.arange(MP * ps, dtype=jnp.int32)[None, None]
+            <= positions[:, :, None]
+        )[:, None]  # (B, 1, T, S) over the head axis
+        scores = jnp.where(mask, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkr->bqhr", p, c_all.astype(jnp.float32))
+        out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_v.astype(jnp.float32)).astype(x.dtype)
+    # Zero padding rows — same NaN containment as gqa_prefill_paged.
+    out = jnp.where(wm[:, :, None, None], out, 0.0)
+    return out.reshape(B, T, -1) @ params["wo"], pools

@@ -202,6 +202,32 @@ def decode_step_paged(params, tokens, cache, pos, page_table, cfg: ModelConfig,
     return logits, {"blocks": new_pools}
 
 
+def prefill_paged(params, tokens, cache, pos0, n_new, page_table,
+                  cfg: ModelConfig, *, attn_impl: str = "flash",
+                  schedule=None):
+    """Compiled-forward batched prefill against the paged cache.
+
+    tokens: int32 (B, T) — up to T new prompt tokens per slot (token i
+    at absolute position ``pos0[b] + i``, zero-padded past ``n_new[b]``;
+    slots with n_new == 0 ride along untouched).  Writes every new
+    token's K/V through the shared page table and returns the updated
+    cache — O(prompt) total flops per slot, versus the chunked
+    masked-decode walk's O(prompt²).  Logits are not computed: the
+    engine feeds the prompt's last token to the first decode step, the
+    same contract as chunked prefill.  ``schedule`` is the prefill page
+    schedule device table (required for attn_impl="flash"; ignored for
+    "xla")."""
+    if cfg.embed_inputs:
+        x = embed(tokens, params["embed"])
+    else:
+        x = tokens
+    _, new_pools = tfm.stack_prefill_paged(
+        params["blocks"], x, cfg, cache["blocks"], pos0, n_new, page_table,
+        attn_impl=attn_impl, schedule=schedule,
+    )
+    return {"blocks": new_pools}
+
+
 def count_params(params) -> int:
     return int(sum(x.size for x in jax.tree.leaves(params)))
 

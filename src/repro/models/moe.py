@@ -85,7 +85,8 @@ def _router_aux(xt, router_w, cfg: ModelConfig):
 
 
 def _dispatch_compute_combine(
-    xt, router_w, w_gate, w_up, w_down, cfg: ModelConfig, e_offset, E_local: int
+    xt, router_w, w_gate, w_up, w_down, cfg: ModelConfig, e_offset, E_local: int,
+    token_mask=None, lossless=False,
 ):
     """Core MoE math over ``E_local`` experts starting at ``e_offset``.
 
@@ -93,7 +94,20 @@ def _dispatch_compute_combine(
     dispatch/GEMM/combine touch only the local experts — tokens routed
     elsewhere contribute zero here and are summed in by the model-axis
     psum of the EP wrapper.  With e_offset=0, E_local=E this is the plain
-    single-device forward.  Returns out (T, d) f32."""
+    single-device forward.  Returns out (T, d) f32.
+
+    ``token_mask`` (bool (T,), optional) marks valid tokens: invalid
+    tokens (prefill padding rows) are sorted past every expert segment,
+    so they neither consume expert capacity nor contribute output —
+    without it a cohort's pad rows can displace another slot's real
+    tokens from a capacity-bounded expert.
+
+    ``lossless`` sizes every expert buffer to hold all routed entries,
+    so no token is ever dropped.  The serving paths require it: capacity
+    ``cap = f(T)`` makes drop behaviour depend on the dispatch shape,
+    and the engine's differential contract (chunked == compiled ==
+    dense, greedy-token-identical) only holds when a token's expert
+    output is independent of how many other tokens share its dispatch."""
     T, d = xt.shape
     E, k = cfg.num_experts, cfg.top_k
 
@@ -103,11 +117,16 @@ def _dispatch_compute_combine(
     top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)  # renormalise
 
     # ---- sort-based dispatch over the local experts ----------------------
-    cap = int(np.ceil(T * k / E * cfg.capacity_factor / 8.0) * 8)
+    if lossless:
+        cap = int(np.ceil(T * k / 8.0) * 8)  # every routed entry fits
+    else:
+        cap = int(np.ceil(T * k / E * cfg.capacity_factor / 8.0) * 8)
     e_flat = top_e.reshape(-1) - e_offset  # local expert ids (may be OOB)
     w_flat = top_w.reshape(-1)
     tok_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
     local = (e_flat >= 0) & (e_flat < E_local)
+    if token_mask is not None:
+        local = local & token_mask[tok_flat]
     e_key = jnp.where(local, e_flat, E_local)  # non-local sorts to the end
 
     order = jnp.argsort(e_key, stable=True)
@@ -135,8 +154,13 @@ def _dispatch_compute_combine(
     return out
 
 
-def moe_forward(params, x, cfg: ModelConfig):
+def moe_forward(params, x, cfg: ModelConfig, token_mask=None, lossless=False):
     """x: (B, S, d) -> (B, S, d), aux load-balance loss (f32 scalar).
+
+    ``token_mask`` (bool (B, S), optional): valid-token mask forwarded to
+    the dispatch — padding rows are kept out of expert capacity (see
+    :func:`_dispatch_compute_combine`).  ``lossless`` disables capacity
+    dropping entirely (the serving/decode setting).
 
     Dispatch backends:
       * host-local / no mesh: single-device sort-based dispatch;
@@ -161,10 +185,11 @@ def moe_forward(params, x, cfg: ModelConfig):
     )
 
     aux = _router_aux(x.reshape(B * S, d), params["router"], cfg)
+    mask_flat = None if token_mask is None else token_mask.reshape(B * S)
     if not use_ep:
         out = _dispatch_compute_combine(
             x.reshape(B * S, d), params["router"], params["w_gate"],
-            params["w_up"], params["w_down"], cfg, 0, E,
+            params["w_up"], params["w_down"], cfg, 0, E, mask_flat, lossless,
         )
     else:
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -174,12 +199,18 @@ def moe_forward(params, x, cfg: ModelConfig):
         dp_nomodel = tuple(a for a in dp if a != "model")
         x_spec = P(dp_nomodel if dp_nomodel else None, None, None)
 
-        def body(xl, router_w, w_gate, w_up, w_down):
+        mask_bs = (
+            jnp.ones((B, S), dtype=bool) if mask_flat is None
+            else mask_flat.reshape(B, S)
+        )
+        mask_spec = P(dp_nomodel if dp_nomodel else None, None)
+
+        def body(xl, ml, router_w, w_gate, w_up, w_down):
             Bl = xl.shape[0]
             rank = jax.lax.axis_index("model")
             out = _dispatch_compute_combine(
                 xl.reshape(-1, d), router_w, w_gate, w_up, w_down,
-                cfg, rank * E_local, E_local,
+                cfg, rank * E_local, E_local, ml.reshape(-1), lossless,
             )
             out = jax.lax.psum(out.astype(x.dtype), "model")
             return out.reshape(Bl, -1, d)
@@ -189,13 +220,14 @@ def moe_forward(params, x, cfg: ModelConfig):
             mesh=mesh,
             in_specs=(
                 x_spec,
+                mask_spec,
                 P(None, None),
                 P("model", None, None),
                 P("model", None, None),
                 P("model", None, None),
             ),
             out_specs=x_spec,
-        )(x, params["router"], params["w_gate"], params["w_up"],
+        )(x, mask_bs, params["router"], params["w_gate"], params["w_up"],
           params["w_down"])
         out = out_bsd.reshape(B * S, d).astype(jnp.float32)
 

@@ -99,7 +99,10 @@ def block_decode(params, x, cfg: ModelConfig, cache, pos):
     x = x + y
     h = rms_norm(x, params["norm2"], cfg.norm_eps)
     if kind == "moe":
-        y, _ = moe_mod.moe_forward(params["ffn"], h, cfg)
+        # lossless: serving dispatches come in many shapes (decode tick,
+        # chunked prefill, compiled-forward prefill) and the engine's
+        # differential contract needs shape-independent expert outputs
+        y, _ = moe_mod.moe_forward(params["ffn"], h, cfg, lossless=True)
         x = x + y
     else:
         x = x + mlp(h, params["ffn"], cfg.mlp_act)
@@ -130,7 +133,43 @@ def block_decode_paged(params, x, cfg: ModelConfig, pools, pos, page_table, *,
     x = x + y
     h = rms_norm(x, params["norm2"], cfg.norm_eps)
     if kind == "moe":
-        y, _ = moe_mod.moe_forward(params["ffn"], h, cfg)
+        y, _ = moe_mod.moe_forward(params["ffn"], h, cfg, lossless=True)
+        x = x + y
+    else:
+        x = x + mlp(h, params["ffn"], cfg.mlp_act)
+    return x, pools
+
+
+def block_prefill_paged(params, x, cfg: ModelConfig, pools, pos0, n_new,
+                        page_table, *, attn_impl: str = "flash",
+                        schedule=None):
+    """Batched multi-token prefill step against a paged KV pool: every
+    new prompt token of every slot in one dispatch.  Returns (x, pools)."""
+    kind = cfg.block_kind
+    if kind == "mamba2":
+        raise NotImplementedError("recurrent blocks have no paged KV cache")
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    if cfg.is_mla:
+        y, pools = attn.mla_prefill_paged(
+            params["attn"], h, cfg, pools, pos0, n_new, page_table,
+            attn_impl=attn_impl, schedule=schedule,
+        )
+    else:
+        y, pools = attn.gqa_prefill_paged(
+            params["attn"], h, cfg, pools, pos0, n_new, page_table,
+            attn_impl=attn_impl, schedule=schedule,
+        )
+    x = x + y
+    h = rms_norm(x, params["norm2"], cfg.norm_eps)
+    if kind == "moe":
+        # Padding rows (beyond each slot's n_new) carry garbage
+        # activations; without the mask they are routed and can displace
+        # another slot's REAL tokens from a capacity-bounded expert.
+        T = x.shape[1]
+        wm = jnp.arange(T, dtype=jnp.int32)[None] < n_new[:, None]
+        y, _ = moe_mod.moe_forward(
+            params["ffn"], h, cfg, token_mask=wm, lossless=True
+        )
         x = x + y
     else:
         x = x + mlp(h, params["ffn"], cfg.mlp_act)
@@ -266,6 +305,30 @@ def stack_decode_paged(stacked, x, cfg: ModelConfig, pools, pos, page_table, *,
         x, new_pool = block_decode_paged(
             layer_params, x, cfg, pool, pos, page_table,
             write_mask=write_mask, attn_impl=attn_impl,
+        )
+        return x, new_pool
+
+    x, new_pools = jax.lax.scan(
+        scan_fn, x, (stacked, pools),
+        unroll=cfg.num_layers if cfg.scan_unroll else 1,
+    )
+    return x, new_pools
+
+
+def stack_prefill_paged(stacked, x, cfg: ModelConfig, pools, pos0, n_new,
+                        page_table, *, attn_impl: str = "flash",
+                        schedule=None):
+    """Batched paged prefill through all layers (the compiled-forward
+    admission path: one scan over layers, each layer one scatter + one
+    whole-cohort attention dispatch).  Returns (x, pools)."""
+    if cfg.hybrid_attn_every:
+        raise ValueError("paged KV serving requires a pure attention stack")
+
+    def scan_fn(x, inp):
+        layer_params, pool = inp
+        x, new_pool = block_prefill_paged(
+            layer_params, x, cfg, pool, pos0, n_new, page_table,
+            attn_impl=attn_impl, schedule=schedule,
         )
         return x, new_pool
 

@@ -25,11 +25,25 @@ cluster, so the per-step gather stream decomposes into few long runs
 (the paper's locality claim applied to serving; measured by
 ``PagedKVCache.gather_runs`` in benchmarks/bench_serving.py).
 
-Prefill is *chunked*: ``prefill_chunk`` prompt tokens advance in ONE
-dispatch (a lax.scan of masked single-token decode steps — exact, and
-``chunk``× fewer dispatches than the old token-by-token loop).  The
-compiled ``forward`` prefill + cache scatter remains the production
-path for very long prompts (the ``prefill_32k`` dry-run cell).
+Prefill has two modes (``prefill=``).  ``"chunked"`` advances
+``prefill_chunk`` prompt tokens in ONE dispatch (a lax.scan of masked
+single-token decode steps — exact, and ``chunk``× fewer dispatches than
+the old token-by-token loop).  ``"compiled"`` (paged only, PR 10) runs
+the whole cohort's prompts through ONE batched forward per admission:
+every layer scatters all new K/V through the page table, then attends
+all new tokens causally over their prefixes — O(prompt) total flops per
+slot instead of the chunked walk's O(prompt²), and a handful of
+dispatches instead of ``prompt/chunk``.
+
+``prefix_sharing=True`` (paged only) turns admission into a prefix-trie
+walk over :class:`~repro.serve.kv_pages.PagedKVCache`: whole pages
+whose token chain matches an earlier prompt are mapped refcount++ with
+zero copies, prefill resumes at the first unmatched token, and the
+first divergent write to a still-shared page triggers a copy-on-write
+(one batched device page copy per dispatch, placed by the Hilbert
+layout).  Eviction decrements refcounts; pages free only at zero.
+Both features compose with either prefill mode and stay
+greedy-token-identical to the dense reference.
 
 Since PR 8 the request-side machinery — typed queue, capacity-limited
 admission, cohort ordering, the per-tick stats ring — is the generic
@@ -55,6 +69,7 @@ from repro.models import (
     decode_step_paged,
     init_cache,
     init_paged_cache,
+    prefill_paged,
 )
 from .kv_pages import PagedKVCache
 from .tick import TickCore
@@ -138,6 +153,29 @@ def _masked_chunk_step_paged(params, toks, mask, cache, pos, page_table, *,
     return cache, pos
 
 
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "attn_impl"), donate_argnums=(2,)
+)
+def _compiled_prefill_paged(params, toks, cache, pos0, n_new, page_table,
+                            schedule, *, cfg, attn_impl):
+    """Compiled-forward prefill: the whole cohort's new prompt tokens in
+    one batched dispatch per admission.  Donates the pools like the
+    decode steps (pad and inactive lanes trash-divert their writes)."""
+    return prefill_paged(
+        params, toks, cache, pos0, n_new, page_table, cfg,
+        attn_impl=attn_impl, schedule=schedule,
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_pages(cache, src, dst):
+    """Batched copy-on-write page copy: physical page src[i] → dst[i]
+    across every layer's pool leaf ((L, P, ...) arrays).  The pair list
+    is padded with (0, 0) — trash-page self-copies are harmless — so a
+    few pow2 pair-count buckets serve every COW batch."""
+    return jax.tree.map(lambda x: x.at[:, dst].set(x[:, src]), cache)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _zero_slot(cache, slot):
     """Zero ONE slot's rows across the cache pytree (slot is a traced
@@ -171,6 +209,8 @@ class ServeEngine:
         num_pages: int | None = None,
         page_layout: str = "hilbert",
         prefill_chunk: int = 8,
+        prefill: str = "chunked",
+        prefix_sharing: bool | str = False,
         hilbert_admission: bool = False,
         admitted_log: int = 4096,
         stats_capacity: int = 256,
@@ -183,6 +223,25 @@ class ServeEngine:
                 "paged serving requires a pure attention stack "
                 "(recurrent blocks carry O(1) state — nothing to page)"
             )
+        if prefill not in ("chunked", "compiled"):
+            raise ValueError(
+                f"prefill {prefill!r}; one of ('chunked', 'compiled')"
+            )
+        if prefill == "compiled" and not paged:
+            raise ValueError(
+                "compiled prefill writes K/V through the page table — "
+                "requires paged=True"
+            )
+        if isinstance(prefix_sharing, str):
+            if prefix_sharing not in ("off", "on"):
+                raise ValueError(
+                    f"prefix_sharing {prefix_sharing!r}; one of ('off', 'on')"
+                )
+            prefix_sharing = prefix_sharing == "on"
+        if prefix_sharing and not paged:
+            raise ValueError("prefix sharing maps pages — requires paged=True")
+        self.prefill_mode = prefill
+        self.prefix_sharing = bool(prefix_sharing)
         self.cfg = cfg
         self.params = params
         self.num_slots = num_slots
@@ -286,6 +345,12 @@ class ServeEngine:
             ticket.done = True
             ticket.result = slot
             if self.paged:
+                if self.prefix_sharing:
+                    # map trie-matched pages (refcount++, zero copy) and
+                    # resume prefill at the first unmatched token
+                    self.pos[slot] = self.kv_pages.share_prefix(
+                        slot, req.prompt[:-1]
+                    )
                 # stale page contents are unreachable (positional mask +
                 # write-before-attend), so admission allocates, never zeroes
                 self.kv_pages.ensure_pos(slot, max(len(req.prompt) - 1, 0))
@@ -298,12 +363,93 @@ class ServeEngine:
             del self.admitted[: len(self.admitted) - self._admitted_log]
         self._prefill(new_slots)
 
+    def _prepare_cow(self, ranges: list[tuple[int, int, int]]) -> None:
+        """Copy-on-write barrier before a dispatch that writes positions
+        ``[lo, hi)`` per slot: remap still-shared pages in range to
+        fresh physical pages and run ONE batched device copy for the
+        (src, dst) pairs."""
+        pairs: list[tuple[int, int]] = []
+        for slot, lo, hi in ranges:
+            pairs.extend(self.kv_pages.prepare_write(slot, lo, hi))
+        if not pairs:
+            return
+        n = 1 << max(len(pairs) - 1, 0).bit_length()
+        src = np.zeros((n,), dtype=np.int32)
+        dst = np.zeros((n,), dtype=np.int32)
+        src[: len(pairs)] = [p[0] for p in pairs]
+        dst[: len(pairs)] = [p[1] for p in pairs]
+        self.cache = _copy_pages(self.cache, jnp.asarray(src), jnp.asarray(dst))
+
     def _prefill(self, slots: list[int]) -> None:
+        """Prefill freshly admitted slots via the configured mode, then
+        publish their full pages into the prefix trie (registration is
+        post-prefill, so sharing is strictly cross-cohort — a dispatch
+        never attends pages it is also writing for another slot)."""
+        if self.prefill_mode == "compiled":
+            self._prefill_compiled(slots)
+        else:
+            self._prefill_chunked(slots)
+        if self.paged and self.prefix_sharing:
+            for s in slots:
+                self.kv_pages.register_prefix(s, self.slot_req[s].prompt[:-1])
+        for s in slots:
+            self.next_token[s] = self.slot_req[s].prompt[-1]
+
+    def _prefill_compiled(self, slots: list[int]) -> None:
+        """One batched compiled-forward dispatch admits the cohort: all
+        new prompt tokens of all new slots, positions
+        ``pos0[s]..pos0[s]+n_new[s]-1``, written through the page table
+        (inactive and pad lanes trash-diverted, so old active slots
+        ride along untouched).  Token width is bucketed to pow2 pages so
+        same-bucket cohorts share one executable."""
+        new = {s: self.slot_req[s].prompt[int(self.pos[s]) : -1] for s in slots}
+        n_max = max((len(v) for v in new.values()), default=0)
+        if self.prefix_sharing:
+            self._prepare_cow(
+                [(s, int(self.pos[s]), int(self.pos[s]) + len(new[s]))
+                 for s in slots]
+            )
+        if n_max == 0:
+            return  # fully shared (or single-token) prompts: nothing new
+        ps = self.page_size
+        T = ps * (1 << max(-(-n_max // ps) - 1, 0).bit_length())
+        toks = np.zeros((self.num_slots, T), dtype=np.int32)
+        n_new = np.zeros((self.num_slots,), dtype=np.int32)
+        for s in slots:
+            toks[s, : len(new[s])] = new[s]
+            n_new[s] = len(new[s])
+        pos0 = self.pos.copy()
+        schedule = None
+        if self.attn_impl == "flash":
+            from repro.kernels.attention import prefill_page_schedule_device
+
+            schedule = prefill_page_schedule_device(
+                tuple(int(p) for p in pos0), tuple(int(n) for n in n_new),
+                ps, self.max_pages,
+            )
+        self.cache = _compiled_prefill_paged(
+            self.params, jnp.asarray(toks), self.cache, jnp.asarray(pos0),
+            jnp.asarray(n_new), self.kv_pages.device_table(), schedule,
+            cfg=self.cfg, attn_impl=self.attn_impl,
+        )
+        for s in slots:
+            self.pos[s] = int(pos0[s]) + len(new[s])
+
+    def _prefill_chunked(self, slots: list[int]) -> None:
         """Chunked prefill for freshly admitted slots: prefill_chunk
         prompt tokens per dispatch, batched ACROSS the new slots (old
         active slots ride along masked — their cache and pos are
-        untouched)."""
-        remaining = {s: list(self.slot_req[s].prompt[:-1]) for s in slots}
+        untouched).  With prefix sharing the walk resumes at each slot's
+        matched-token position."""
+        remaining = {
+            s: list(self.slot_req[s].prompt[int(self.pos[s]) : -1])
+            for s in slots
+        }
+        if self.paged and self.prefix_sharing:
+            self._prepare_cow(
+                [(s, int(self.pos[s]), int(self.pos[s]) + len(remaining[s]))
+                 for s in slots]
+            )
         C = self.prefill_chunk
         while any(remaining.values()):
             toks = np.zeros((self.num_slots, C), dtype=np.int32)
@@ -326,8 +472,6 @@ class ServeEngine:
                     self.cache, jnp.asarray(self.pos), cfg=self.cfg,
                 )
             self.pos = np.array(pos)  # copy: np.asarray of a jax array is read-only
-        for s in slots:
-            self.next_token[s] = self.slot_req[s].prompt[-1]
 
     # ------------------------------------------------------------------
     def step(self) -> None:
@@ -344,6 +488,13 @@ class ServeEngine:
             for slot in range(self.num_slots):
                 if self.active[slot]:
                     self.kv_pages.ensure_pos(slot, int(self.pos[slot]))
+            if self.prefix_sharing:
+                # first divergent write into a still-shared page (e.g. a
+                # fully-matched prompt's first generated token) COWs it
+                self._prepare_cow(
+                    [(s, int(self.pos[s]), int(self.pos[s]) + 1)
+                     for s in range(self.num_slots) if self.active[s]]
+                )
             logits, self.cache = _masked_step_paged(
                 self.params, jnp.asarray(toks), self.cache,
                 jnp.asarray(self.pos), jnp.asarray(self.active),

@@ -291,6 +291,47 @@ class TestAutoDispatch:
         winner = ScheduleChoice.from_key(out["winner"])
         assert autotune.lookup("floyd_warshall", ((32, 32),)) == winner
 
+    def test_candidate_choices_block_sweep_keeps_bare_default_first(self):
+        """With a block sweep, the candidate list still leads with the
+        app's true default (default curve, kernel-default blocks) — the
+        baseline row the tuned_speedup gate is named after — and crosses
+        every curve with every block."""
+        blocks = ((32, 32, 32), (64, 64, 64))
+        cands = autotune.candidate_choices(
+            "matmul", curves=("hilbert", "fur"), blocks=blocks
+        )
+        assert cands[0] == ScheduleChoice(curve="fur", kind="tile")
+        variants = {(c.curve, c.block) for c in cands[1:]}
+        assert variants == {
+            (cv, b) for cv in ("fur", "hilbert") for b in blocks
+        }
+
+    def test_autotune_app_block_sweep_records(self, tuning_tmp):
+        """Block-variant winners round-trip through the tuning cache and
+        redispatch bit-identically through choice="auto"."""
+        rng = np.random.default_rng(3)
+        a = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+        cands = autotune.candidate_choices(
+            "matmul", curves=("fur", "hilbert"), blocks=((32, 32, 32),)
+        )
+        out = autotune.autotune_app(
+            "matmul", a, b, candidates=cands, repeats=1, max_measure=3,
+            interpret=True,
+        )
+        assert out["rows"][0]["default"]
+        assert sum(r["chosen"] for r in out["rows"]) == 1
+        measured = [ScheduleChoice.from_key(r["choice"]) for r in out["rows"]]
+        assert measured[0].block is None
+        assert any(c.block == (32, 32, 32) for c in measured[1:])
+        winner = ScheduleChoice.from_key(out["winner"])
+        assert autotune.lookup("matmul", ((64, 64), (64, 64))) == winner
+        base = ops.matmul(a, b, interpret=True)
+        auto = ops.matmul(a, b, choice="auto", interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(auto), np.asarray(base), atol=1e-4, rtol=1e-5
+        )
+
 
 # ---------------------------------------------------------------------------
 # Serving satellites: re-seeding + eviction

@@ -357,3 +357,355 @@ class TestEngineModes:
         params = init_params(jax.random.PRNGKey(0), cfg)
         with pytest.raises(ValueError, match="pure attention"):
             ServeEngine(cfg, params, paged=True)
+
+
+# ---------------------------------------------------------------------------
+# prefill kernel (compiled-forward batched prefill)
+# ---------------------------------------------------------------------------
+
+class TestPrefillKernel:
+    def _setup(self, seed=0):
+        B, Hkv, g, Dk, ps, MP, P = 2, 2, 3, 16, 8, 4, 12
+        rng = np.random.default_rng(seed)
+        pos0 = np.array([3, 0], dtype=np.int32)
+        n_new = np.array([5, 9], dtype=np.int32)
+        pt = np.zeros((B, MP), dtype=np.int32)
+        pt[0, 0] = 4
+        pt[1, :2] = [7, 2]
+        T = 16  # two q tiles of bq=ps
+        q = rng.normal(size=(B, T, Hkv, g, Dk)).astype(np.float32)
+        kp = rng.normal(size=(P, ps, Hkv, Dk)).astype(np.float32)
+        vp = rng.normal(size=(P, ps, Hkv, Dk)).astype(np.float32)
+        return B, Hkv, g, Dk, ps, MP, pos0, n_new, pt, q, kp, vp
+
+    def _run(self, pos0, n_new, ps, MP, pt, q, kp, vp):
+        from repro.kernels.attention import (
+            flash_attention_prefill,
+            prefill_page_schedule,
+        )
+
+        sched = jnp.asarray(prefill_page_schedule(pos0, n_new, ps, MP))
+        return flash_attention_prefill(
+            sched, jnp.asarray(pt), jnp.asarray(pos0), jnp.asarray(q),
+            jnp.asarray(kp), jnp.asarray(vp), interpret=True,
+        )
+
+    def test_vs_numpy_oracle_ragged(self):
+        B, Hkv, g, Dk, ps, MP, pos0, n_new, pt, q, kp, vp = self._setup()
+        out = np.asarray(self._run(pos0, n_new, ps, MP, pt, q, kp, vp))
+        for b in range(B):
+            ks = np.concatenate([kp[pt[b, i]] for i in range(MP)])
+            vs = np.concatenate([vp[pt[b, i]] for i in range(MP)])
+            for i in range(int(n_new[b])):
+                qpos = int(pos0[b]) + i
+                for h in range(Hkv):
+                    s = q[b, i, h] @ ks[: qpos + 1, h].T / np.sqrt(Dk)
+                    p = np.exp(s - s.max(-1, keepdims=True))
+                    p /= p.sum(-1, keepdims=True)
+                    ref = p @ vs[: qpos + 1, h]
+                    np.testing.assert_allclose(
+                        out[b, i, h], ref, atol=2e-6, rtol=1e-5
+                    )
+
+    def test_trash_page_content_irrelevant(self):
+        """The schedule only visits a slot's allocated pages, so even a
+        NaN-poisoned trash page cannot perturb prefill outputs."""
+        B, Hkv, g, Dk, ps, MP, pos0, n_new, pt, q, kp, vp = self._setup(1)
+        base = np.asarray(self._run(pos0, n_new, ps, MP, pt, q, kp, vp))
+        kp2, vp2 = kp.copy(), vp.copy()
+        kp2[TRASH_PAGE] = np.nan
+        vp2[TRASH_PAGE] = np.nan
+        poisoned = np.asarray(self._run(pos0, n_new, ps, MP, pt, q, kp2, vp2))
+        for b in range(B):
+            n = int(n_new[b])
+            np.testing.assert_array_equal(base[:, :n], poisoned[:, :n])
+
+
+class TestScheduleDeviceCache:
+    def test_first_call_under_jit_is_not_a_tracer(self):
+        """A first call from inside a jit trace must cache a concrete
+        device table, not pin the trace's tracer for later callers."""
+        from repro.core.schedule import schedule_cache_clear
+        from repro.kernels.attention import (
+            decode_page_schedule,
+            decode_page_schedule_device,
+        )
+
+        schedule_cache_clear()
+
+        @jax.jit
+        def f(x):
+            return x + decode_page_schedule_device(2, 3).sum()
+
+        f(jnp.float32(0))  # first call happens under the trace
+        dev = decode_page_schedule_device(2, 3)
+        assert not isinstance(dev, jax.core.Tracer)
+        np.testing.assert_array_equal(
+            np.asarray(dev), decode_page_schedule(2, 3)
+        )
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: allocator level
+# ---------------------------------------------------------------------------
+
+class TestKVPagesSharing:
+    def test_share_register_roundtrip(self):
+        c = PagedKVCache(2, 4, 8)
+        toks = list(range(19))
+        c.ensure_pos(0, 18)
+        assert c.register_prefix(0, toks) == 2  # 19 toks -> 2 full pages
+        m = c.share_prefix(1, toks)
+        assert m == 16
+        assert c.page_table[1, 0] == c.page_table[0, 0]
+        assert c.page_table[1, 1] == c.page_table[0, 1]
+        # owner + trie retention + sharer
+        assert c.refcount[c.page_table[0, 0]] == 3
+        # the sharer only allocates its tail page
+        before = c.stat_allocated
+        c.ensure_pos(1, 18)
+        assert c.stat_allocated == before + 1
+
+    def test_partial_page_match_then_cow(self):
+        c = PagedKVCache(2, 4, 8)
+        donor = list(range(16))
+        c.ensure_pos(0, 15)
+        c.register_prefix(0, donor)
+        # second prompt shares only the first 11 tokens of page 1
+        taker = donor[:11] + [99, 98, 97]
+        m = c.share_prefix(1, taker)
+        assert m == 11  # page 0 exact + 3-token partial of page 1
+        shared = int(c.page_table[1, 1])
+        assert shared == int(c.page_table[0, 1])
+        # first divergent write triggers COW on the partially-shared page
+        pairs = c.prepare_write(1, 11, 14)
+        assert len(pairs) == 1 and pairs[0][0] == shared
+        assert int(c.page_table[1, 1]) == pairs[0][1] != shared
+        assert c.refcount[shared] == 2  # owner + trie keep the original
+        assert c.stat_cow == 1
+        # exclusively-owned pages never COW again
+        assert c.prepare_write(1, 11, 14) == []
+
+    def test_refcount_zero_returns_to_free_list(self):
+        c = PagedKVCache(2, 4, 8)
+        toks = list(range(16))
+        c.ensure_pos(0, 15)
+        c.register_prefix(0, toks)
+        c.share_prefix(1, toks)
+        free0 = c.num_free
+        assert c.free_slot(0) == 0  # trie + sharer still hold both pages
+        assert c.free_slot(1) == 0  # trie still holds them
+        assert c.num_free == free0
+        assert c.clear_prefix_cache() == 2  # last reference: freed
+        assert c.num_free == free0 + 2
+        assert (c.refcount[1:] == 0).all()
+
+    def test_exhaustion_reclaims_cold_trie_pages(self):
+        """Under pool pressure, LRU trie-only pages are reclaimed
+        instead of raising MemoryError."""
+        c = PagedKVCache(2, 2, 4, num_pages=5, layout="naive")
+        c.ensure_pos(0, 7)  # 2 pages
+        c.register_prefix(0, list(range(8)))
+        c.free_slot(0)  # pages survive via trie retention only
+        assert c.num_free == 2 and c.prefix_pages() == 2
+        c.ensure_pos(1, 7)  # needs 2 pages: free list has 2
+        c.ensure_pos(0, 3)  # needs 1 more: must evict a trie leaf
+        assert c.prefix_pages() == 1
+        c.free_slot(0)
+        c.free_slot(1)
+        assert c.clear_prefix_cache() == 1
+        assert c.num_free == c.num_pages - 1
+
+    def _check_invariants(self, c):
+        refs = np.zeros(c.num_pages, dtype=int)
+        for s in range(c.num_slots):
+            for lp in range(int(c.pages_used[s])):
+                phys = int(c.page_table[s, lp])
+                if phys != TRASH_PAGE:
+                    refs[phys] += 1
+        for node in c._iter_trie():
+            refs[node.page] += 1
+        np.testing.assert_array_equal(refs[1:], c.refcount[1:])
+        for phys in c._free:
+            assert refs[phys] == 0, f"page {phys} free but referenced"
+
+    def test_cow_churn_invariants_across_seeds(self):
+        """Interleaved admission-with-sharing, growth (COW on shared
+        pages) and eviction keep refcounts exactly equal to the table +
+        trie reference counts, across 10 seeds."""
+        for seed in range(10):
+            rng = np.random.default_rng(seed)
+            B, MP, ps = 4, 4, 8
+            c = PagedKVCache(B, MP, ps, num_pages=40)
+            base = [int(t) for t in rng.integers(0, 50, size=MP * ps)]
+            pos = np.zeros(B, dtype=int)
+            active = np.zeros(B, dtype=bool)
+            for _ in range(200):
+                s = int(rng.integers(0, B))
+                if not active[s]:
+                    n = int(rng.integers(2, MP * ps))
+                    toks = base[:n]
+                    matched = c.share_prefix(s, toks)
+                    c.ensure_pos(s, n - 1)
+                    c.prepare_write(s, matched, n)
+                    c.register_prefix(s, toks)
+                    pos[s] = n
+                    active[s] = True
+                elif pos[s] < MP * ps - 1 and rng.random() < 0.8:
+                    c.ensure_pos(s, int(pos[s]))
+                    c.prepare_write(s, int(pos[s]), int(pos[s]) + 1)
+                    pos[s] += 1
+                else:
+                    c.free_slot(s)
+                    active[s] = False
+                self._check_invariants(c)
+            assert c.stat_shared > 0 and c.stat_cow > 0
+            for s in range(B):
+                c.free_slot(s)
+            c.clear_prefix_cache()
+            assert c.num_free == c.num_pages - 1
+
+    def test_sharing_gather_runs_bounded(self):
+        """COW placement goes through the curve layout, so a shared-
+        prefix workload's decode gather stream stays within 2x the
+        run count of the identical unshared workload."""
+
+        def churn(share, seed):
+            rng = np.random.default_rng(seed)
+            B, MP, ps = 4, 8, 16
+            c = PagedKVCache(B, MP, ps)
+            base = [int(t) for t in rng.integers(0, 50, size=3 * ps)]
+            pos = np.zeros(B, dtype=int)
+            for s in range(B):
+                n = 2 * ps + int(rng.integers(0, ps))
+                toks = base[:n]
+                matched = c.share_prefix(s, toks) if share else 0
+                c.ensure_pos(s, n - 1)
+                c.prepare_write(s, matched, n)
+                if share:
+                    c.register_prefix(s, toks)
+                pos[s] = n
+            for _ in range(200):
+                s = int(rng.integers(0, B))
+                if pos[s] >= MP * ps - 1:
+                    continue
+                c.ensure_pos(s, int(pos[s]))
+                c.prepare_write(s, int(pos[s]), int(pos[s]) + 1)
+                pos[s] += 1
+            return c.gather_runs()
+
+        shared = np.mean([churn(True, s) for s in range(5)])
+        unshared = np.mean([churn(False, s) for s in range(5)])
+        assert shared <= 2.0 * unshared, (shared, unshared)
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing + compiled prefill: engine level
+# ---------------------------------------------------------------------------
+
+SHARED_BASE = [2, 7, 1, 8, 2, 8, 4, 5, 9, 0, 4, 5, 2, 3, 5, 6, 2, 6, 4, 3]
+
+
+def _shared_prompts():
+    """4 prompts over 2 slots sharing a 20-token prefix with long
+    divergent tails (page_size=16: every donor registers 2 full pages,
+    so later admissions hit page 0 exactly and page 1 partially at 4
+    common tokens) — forces trie hits, partial-page COW on the first
+    post-match write, and slot re-admission."""
+    return [
+        SHARED_BASE + [7] * 15,
+        SHARED_BASE + [9] * 17,
+        SHARED_BASE + [11] * 14,
+        SHARED_BASE + [13] * 16,
+    ]
+
+
+class TestPrefillSharingEngine:
+    @pytest.mark.parametrize("arch", [GQA, MLA])
+    def test_64_step_rollout_both_features_on(self, arch):
+        """Acceptance: compiled prefill + prefix sharing stay greedy-
+        token-identical to dense over 64-step rollouts, GQA and MLA,
+        flash and xla, across slot re-admission with shared pages."""
+        cfg = get_reduced(arch, dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        prompts = _shared_prompts()
+
+        def run(**kw):
+            eng = _engine(cfg, params, max_len=160, **kw)
+            reqs = [eng.submit(list(p), max_new=64) for p in prompts]
+            eng.run_until_done()
+            assert all(len(r.out) == 64 for r in reqs)
+            return [r.out for r in reqs], eng
+
+        ref, _ = run(paged=False, attn_impl="xla")
+        for attn in ("xla", "flash"):
+            outs, eng = run(
+                paged=True, attn_impl=attn, prefill="compiled",
+                prefix_sharing=True,
+            )
+            assert outs == ref, f"{arch}/{attn} diverged from dense"
+            assert eng.kv_pages.stat_shared > 0, "sharing never engaged"
+            assert eng.kv_pages.stat_cow > 0, "COW never triggered"
+
+    def test_chunked_with_sharing_token_identical(self):
+        cfg = get_reduced(GQA, dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        prompts = _shared_prompts()
+
+        def run(**kw):
+            eng = _engine(cfg, params, max_len=160, **kw)
+            reqs = [eng.submit(list(p), max_new=12) for p in prompts]
+            eng.run_until_done()
+            return [r.out for r in reqs]
+
+        ref = run(paged=False, attn_impl="xla")
+        got = run(paged=True, attn_impl="flash", prefill="chunked",
+                  prefix_sharing=True)
+        assert got == ref
+
+    def test_compiled_prefill_cache_matches_chunked(self):
+        """Compiled-forward and chunked prefill leave the same cache
+        state (real pages; the trash page absorbs different garbage by
+        design).  Cache-level like the chunked-chunk test — different
+        programs may drift by ulps."""
+        cfg = get_reduced(GQA, dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        prompt = list(range(1, 21))
+        caches = []
+        for mode in ("chunked", "compiled"):
+            eng = _engine(cfg, params, paged=True, prefill=mode)
+            eng.submit(prompt, max_new=4)
+            eng._attach()
+            caches.append(
+                jax.tree.map(lambda x: np.asarray(x)[:, 1:], eng.cache)
+            )
+            assert eng.pos[0] == len(prompt) - 1
+        for a, b in zip(jax.tree.leaves(caches[0]), jax.tree.leaves(caches[1])):
+            np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+    def test_shared_admission_allocates_fewer_pages(self):
+        """Acceptance: admitting prompts with a common prefix allocates
+        strictly fewer fresh pages with sharing on than off."""
+        cfg = get_reduced(GQA, dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        prompts = _shared_prompts()
+
+        def alloc(share):
+            eng = _engine(cfg, params, paged=True, prefill="compiled",
+                          prefix_sharing=share, max_len=160)
+            for p in prompts:
+                eng.submit(list(p), max_new=4)
+            eng.run_until_done()
+            return eng.kv_pages.stat_allocated
+
+        assert alloc(True) < alloc(False)
+
+    def test_ctor_validation(self):
+        cfg = get_reduced(GQA, dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError, match="prefill"):
+            _engine(cfg, params, paged=True, prefill="eager")
+        with pytest.raises(ValueError, match="paged"):
+            _engine(cfg, params, paged=False, prefill="compiled")
+        with pytest.raises(ValueError, match="paged"):
+            _engine(cfg, params, paged=False, prefix_sharing=True)
